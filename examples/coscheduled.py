@@ -1,0 +1,51 @@
+"""Co-scheduled placement (paper §III-B3): a best-effort memory-intensive
+app B spills pages onto the nodes of a high-priority app A without
+degrading A — the two-stage DWP search in action.
+
+    PYTHONPATH=src python examples/coscheduled.py
+"""
+
+import numpy as np
+
+from repro.core import interleave, topology
+from repro.core.canonical import CanonicalTuner
+from repro.core.dwp import CoScheduledTuner, DWPConfig
+from repro.core.simulator import PAPER_WORKLOADS, NumaSimulator
+
+mach = topology.machine_a()
+sim = NumaSimulator(mach)
+workers_b = [0, 1]                     # best-effort app B lives here
+workers_a = [2, 3, 4, 5, 6, 7]         # high-priority app A
+
+app_b = PAPER_WORKLOADS["SC"]          # memory-intensive
+app_a = PAPER_WORKLOADS["FT.C"]        # latency-leaning high-priority
+
+canon = CanonicalTuner(mach).weights_for(workers_b).weights
+tuner = CoScheduledTuner(canon, workers_b, num_pages=4096,
+                         config=DWPConfig(n=6, c=1, rel_tolerance=0.01))
+
+print("two-stage co-scheduled DWP search:")
+period = 0
+while not tuner.done and period < 60:
+    w_b = interleave.dwp_weights(canon, workers_b, tuner.dwp)
+    # A's stall rate rises with B's traffic on A's nodes, but saturates at
+    # A's isolated baseline once the interference drops below ~15% of B's
+    # pages (A's controllers have headroom; paper §III-B3 scenario).
+    b_mass_on_a = w_b[workers_a].sum()
+    stall_a = 0.2 + 0.5 * max(0.0, b_mass_on_a - 0.15)
+    stall_b = sim.run(app_b, workers_b, "weighted", w_b,
+                      noise=0.01).stall_rate
+    for _ in range(tuner.cfg.n):
+        tuner.record(stall_a, stall_b)
+    period += 1
+    print(f"  period {period:2d} stage={tuner.stage} dwp={tuner.dwp:.1f} "
+          f"B-mass-on-A={b_mass_on_a:.2f}")
+
+print(f"\nstage-1 lower bound on B's DWP: {tuner.dwp_lower_bound:.1f} "
+      f"(protects A)")
+print(f"final DWP for B: {tuner.dwp:.1f}")
+w_final = interleave.dwp_weights(canon, workers_b, tuner.dwp)
+t_b = sim.run(app_b, workers_b, 'weighted', w_final).time
+t_b_uw = sim.run(app_b, workers_b, 'uniform_workers').time
+print(f"B speedup vs uniform-workers: {t_b_uw / t_b:.2f}x, with B's pages "
+      f"on A's nodes capped at {w_final[workers_a].sum():.0%}")

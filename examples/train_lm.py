@@ -1,0 +1,76 @@
+"""End-to-end training driver on CPU: reduced LM, synthetic pipeline,
+checkpoint/restart, straggler-aware data routing.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200   # resumes!
+
+Scale knobs: --d-model/--layers grow toward the ~100M-param configuration
+(--preset 100m) when you have more than one CPU core to spare.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data.pipeline import BwapDataRouter, ShardedTokenDataset
+from repro.models.lm import LM
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--ckpt", default="/tmp/bwap_train_ckpt")
+    args = ap.parse_args()
+
+    base = registry.get_smoke_config("qwen2-0.5b")
+    if args.preset == "100m":
+        cfg = dataclasses.replace(base, num_layers=12, d_model=768,
+                                  num_heads=12, num_kv_heads=4, d_ff=2048,
+                                  vocab_size=32000)
+    else:
+        cfg = dataclasses.replace(base, num_layers=args.layers,
+                                  d_model=args.d_model,
+                                  num_heads=4, num_kv_heads=2,
+                                  d_ff=4 * args.d_model, vocab_size=4096)
+    model = LM(cfg)
+    n = cfg.param_counts()["total"]
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} "
+          f"({n / 1e6:.1f}M params)")
+
+    # BWAP-weighted data routing over 4 simulated hosts
+    ds = ShardedTokenDataset(cfg.vocab_size, args.seq, num_shards=16, seed=0)
+    router = BwapDataRouter(16, host_bws=[1.0, 1.0, 0.8, 0.6])
+
+    def batch_fn(step):
+        shards = router.shards_of(step % 4)
+        shard = int(shards[step % max(len(shards), 1)]) if len(shards) else 0
+        return {"tokens": jnp.asarray(ds.batch(shard, step, args.batch))}
+
+    trainer = Trainer(model, OptConfig(lr=3e-3, warmup_steps=20,
+                                       total_steps=args.steps),
+                      LoopConfig(total_steps=args.steps, ckpt_every=50,
+                                 log_every=20),
+                      args.ckpt, batch_fn)
+    step0, *_ = start = trainer.restore_or_init()
+    if step0:
+        print(f"resumed from checkpoint at step {step0}")
+    step, params, opt_state, metrics = trainer.run(start)
+    print(f"done at step {step}; final loss {float(metrics['loss']):.4f} "
+          f"(uniform-random baseline would be "
+          f"{np.log(cfg.vocab_size):.2f})")
+    print(f"mean step time {np.mean(trainer.step_times) * 1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Architecture registry, input shapes, and per-cell input specs.
+
+The 10 assigned architectures are selectable via ``--arch <id>``; each pairs
+with the 4 LM shapes (train_4k / prefill_32k / decode_32k / long_500k).
+``long_500k`` requires sub-quadratic sequence state and only runs for the
+SSM/hybrid families (skips are explicit, with reasons — DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import LM
+from repro.models.whisper import EncDecLM
+
+ARCH_IDS = [
+    "granite-moe-3b-a800m",
+    "deepseek-v3-671b",
+    "qwen2-0.5b",
+    "internlm2-20b",
+    "gemma3-27b",
+    "gemma-2b",
+    "hymba-1.5b",
+    "xlstm-125m",
+    "qwen2-vl-7b",
+    "whisper-tiny",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # train | prefill | decode
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).smoke_config()
+
+
+def make_model(cfg: ModelConfig):
+    return EncDecLM(cfg) if cfg.enc_dec else LM(cfg)
+
+
+def cell_supported(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """Whether (arch x shape) is a valid dry-run cell; reason if skipped."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("quadratic full attention at 524288 tokens "
+                       "(assignment: long_500k only for SSM/hybrid)")
+    return True, ""
+
+
+def _scale_batch(cfg: ModelConfig, shape: Shape,
+                 scale: float) -> tuple[int, int]:
+    b = max(1, int(shape.global_batch * scale))
+    s = max(8, int(shape.seq_len * scale)) if scale < 1 else shape.seq_len
+    return b, s
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, *, batch: int | None = None,
+                seq: int | None = None) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the step
+    (weak-type-correct, shardable, no device allocation)."""
+    b = batch if batch is not None else shape.global_batch
+    s = seq if seq is not None else shape.seq_len
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.compute_dtype)
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            return {"frames": sds((b, cfg.enc_frames, cfg.d_model), cdt),
+                    "tokens": sds((b, s), i32)}
+        batch_d: dict[str, Any] = {}
+        if cfg.frontend == "vision_stub":
+            p = min(cfg.vision_patches, s // 2)
+            batch_d["patch_embeds"] = sds((b, p, cfg.d_model), cdt)
+            batch_d["tokens"] = sds((b, s - p), i32)
+            if cfg.mrope:
+                batch_d["positions"] = sds((3, b, s), i32)
+        else:
+            batch_d["tokens"] = sds((b, s), i32)
+        return batch_d
+
+    # decode: one new token against a cache of capacity == seq_len
+    model = make_model(cfg)
+    if cfg.enc_dec:
+        cache = jax.eval_shape(
+            lambda: model.init_cache(None, b, s, cfg.enc_frames))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {"cache": cache,
+            "tokens": sds((b, 1), i32),
+            "position": sds((), i32)}
+
+
+def step_fn(cfg: ModelConfig, shape: Shape, model=None):
+    """The pure function the dry-run lowers for this cell (no optimizer —
+    train/trainstep.py builds the full train_step with optimizer update)."""
+    model = model or make_model(cfg)
+    if shape.kind == "train":
+        def train_loss(params, batch):
+            return model.loss(params, batch)
+        return train_loss
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+        return prefill
+
+    def decode(params, batch):
+        return model.decode_step(params, batch["cache"], batch["tokens"],
+                                 batch["position"])
+    return decode

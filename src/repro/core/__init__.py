@@ -1,0 +1,17 @@
+"""BWAP core: the paper's contribution (bandwidth-aware weighted page
+placement) as a reusable, hardware-agnostic library. See DESIGN.md §1-3."""
+
+from repro.core import bwmodel, canonical, dwp, interleave, simulator, topology
+from repro.core.canonical import CanonicalTuner
+from repro.core.dwp import CoScheduledTuner, DWPConfig, DWPTuner
+from repro.core.interleave import (dwp_weights, plan_migration,
+                                   weighted_interleave)
+from repro.core.simulator import PAPER_WORKLOADS, NumaSimulator
+from repro.core.topology import Topology, machine_a, machine_b
+
+__all__ = [
+    "bwmodel", "canonical", "dwp", "interleave", "simulator", "topology",
+    "CanonicalTuner", "CoScheduledTuner", "DWPConfig", "DWPTuner",
+    "dwp_weights", "plan_migration", "weighted_interleave",
+    "PAPER_WORKLOADS", "NumaSimulator", "Topology", "machine_a", "machine_b",
+]

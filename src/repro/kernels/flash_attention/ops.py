@@ -1,0 +1,33 @@
+"""jit'd public wrapper: GQA head mapping + layout for the flash kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, window: int = 0, causal: bool = True,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False):
+    """q [B,S,nq,h], k/v [B,T,nkv,h] -> [B,S,nq,h].
+
+    KV heads are repeated lazily into the batched-heads layout the kernel
+    consumes; grouping happens on the [BH, S, h] view so each (batch, head)
+    is an independent grid row.
+    """
+    b, s, nq, h = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qb = q.transpose(0, 2, 1, 3).reshape(b * nq, s, h)
+    kb = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * nq, t, h)
+    vb = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * nq, t, h)
+    out = flash_attention_bh(qb, kb, vb, window=window, causal=causal,
+                             block_q=block_q, block_kv=block_kv,
+                             interpret=interpret)
+    return out.reshape(b, nq, s, h).transpose(0, 2, 1, 3)

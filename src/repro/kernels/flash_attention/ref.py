@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA + causal + window)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0, causal: bool = True):
+    """q [B,S,nq,h], k/v [B,T,nkv,h] -> [B,S,nq,h]. fp32 softmax."""
+    b, s, nq, h = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    q5 = q.reshape(b, s, nkv, g, h)
+    scores = jnp.einsum("bsngh,btnh->bngst", q5.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(h)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= qpos - kpos < window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, nq, h).astype(q.dtype)

@@ -1,0 +1,113 @@
+"""Paged decode-attention Pallas TPU kernel — the BWAP KV-cache consumer.
+
+The KV pool is a page-granular buffer whose pages the BWAP placement layer
+(serve/kvcache.py) distributes across memory domains with Alg.-1 weighted
+interleaving; this kernel walks a sequence's page table (scalar-prefetched so
+the next page's DMA is issued while the current tile computes) and performs
+online-softmax attention per page.
+
+VMEM working set per step: q [nq,h] + one K page + one V page
+(page_size x nkv x h each) + fp32 accumulators — sized for ~16 MiB VMEM with
+page_size 64..256 at h<=256.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int, groups: int,
+                  scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lens_ref[b]
+    page_start = pi * page_size
+
+    @pl.when(page_start < seq_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # [nq, h]
+        k = k_ref[0].astype(jnp.float32)            # [ps, nkv, h]
+        v = v_ref[0].astype(jnp.float32)
+        nq, h = q.shape
+        nkv = k.shape[1]
+        qg = q.reshape(nkv, groups, h)
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))))    # [nkv, g, ps]
+        s = s * scale
+        pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (nkv, groups, page_size), 2)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # [nkv, g, 1]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                       # [nkv, g, ps]
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=2, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))))      # [nkv, g, h]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, page_table, lens, *,
+                    interpret: bool = False):
+    """q [B,nq,h]; pools [P,ps,nkv,h]; page_table [B,mp] (pad with page 0);
+    lens [B] -> [B,nq,h]."""
+    b, nq, h = q.shape
+    ps, nkv = k_pool.shape[1], k_pool.shape[2]
+    mp = page_table.shape[1]
+    groups = nq // nkv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, nq, h), lambda b, p, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((1, ps, nkv, h),
+                         lambda b, p, tbl, ln: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, nkv, h),
+                         lambda b, p, tbl, ln: (tbl[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nq, h), lambda b, p, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nkv, groups, 1), jnp.float32),   # m
+            pltpu.VMEM((nkv, groups, 1), jnp.float32),   # l
+            pltpu.VMEM((nkv, groups, h), jnp.float32),   # acc
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, page_size=ps, groups=groups,
+                               scale=1.0 / np.sqrt(h))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nq, h), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, lens, q, k_pool, v_pool)
+    return out

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def paged_attention(q, k_pool, v_pool, page_table, lens, *,
+                    impl: str = "pallas", interpret: bool = False):
+    """Decode attention over a paged KV pool.
+
+    impl="pallas": the TPU kernel (interpret=True executes it on CPU).
+    impl="reference": the pure-jnp oracle (used by the CPU serve engine).
+    """
+    if impl == "reference":
+        return paged_attention_ref(q, k_pool, v_pool, page_table, lens)
+    return _kernel(q, k_pool, v_pool, page_table, lens, interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged decode attention over a BWAP-placed page pool."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0e38
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, lens):
+    """q [B,nq,h]; pools [P,ps,nkv,h]; page_table [B,mp]; lens [B] -> [B,nq,h].
+
+    Reconstructs the dense KV per sequence by gathering pages, then runs
+    masked softmax attention — the semantics the kernel must match.
+    """
+    b, nq, h = q.shape
+    ps, nkv = k_pool.shape[1], k_pool.shape[2]
+    mp = page_table.shape[1]
+    g = nq // nkv
+
+    k = k_pool[page_table].reshape(b, mp * ps, nkv, h)   # [B,T,nkv,h]
+    v = v_pool[page_table].reshape(b, mp * ps, nkv, h)
+    q5 = q.reshape(b, nkv, g, h)
+    scores = jnp.einsum("bngh,btnh->bngt", q5.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(h)
+    pos = jnp.arange(mp * ps)[None, :]
+    ok = pos < lens[:, None]
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngt,btnh->bngh", probs, v.astype(jnp.float32))
+    return out.reshape(b, nq, h).astype(q.dtype)

@@ -1,0 +1,83 @@
+"""Training launcher.
+
+CPU (this container): runs a reduced config end-to-end with checkpointing:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+        --steps 50
+
+TPU pod (the target): the same entry point builds the production mesh and
+full config; the dry-run path (--dry-run) lowers/compiles only.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the production cell instead of "
+                         "executing (see repro.launch.dryrun for the full "
+                         "sweep)")
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    if args.dry_run:
+        from repro.launch import dryrun
+        rec = dryrun.run_cell(args.arch, "train_4k", multi_pod=False)
+        print(rec.get("status"), rec.get("memory"))
+        return
+
+    cfg = registry.get_smoke_config(args.arch) if args.smoke \
+        else registry.get_config(args.arch)
+    model = registry.make_model(cfg)
+    from repro.data.pipeline import ShardedTokenDataset
+    from repro.train.loop import LoopConfig, Trainer
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainstep import opt_config_for
+
+    ds = ShardedTokenDataset(cfg.vocab_size, args.seq, num_shards=8)
+
+    def batch_fn(step):
+        if cfg.enc_dec:
+            rng = np.random.default_rng(step)
+            return {
+                "frames": jnp.asarray(rng.normal(size=(
+                    args.batch, cfg.enc_frames, cfg.d_model)),
+                    jnp.dtype(cfg.compute_dtype)),
+                "tokens": jnp.asarray(ds.batch(0, step, args.batch)),
+            }
+        if cfg.frontend == "vision_stub":
+            rng = np.random.default_rng(step)
+            p = min(cfg.vision_patches, args.seq // 2)
+            return {
+                "patch_embeds": jnp.asarray(
+                    rng.normal(size=(args.batch, p, cfg.d_model)) * 0.02,
+                    jnp.dtype(cfg.compute_dtype)),
+                "tokens": jnp.asarray(ds.batch(0, step, args.batch)
+                                      [:, :args.seq - p]),
+            }
+        return {"tokens": jnp.asarray(ds.batch(0, step, args.batch))}
+
+    trainer = Trainer(model, opt_config_for(cfg, lr=1e-3,
+                                            total_steps=args.steps),
+                      LoopConfig(total_steps=args.steps, ckpt_every=25,
+                                 log_every=10),
+                      args.ckpt, batch_fn)
+    step, _, _, metrics = trainer.run()
+    print(f"finished at step {step}: loss={float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

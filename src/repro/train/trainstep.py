@@ -1,0 +1,104 @@
+"""train_step / serve_step factories with full optimizer update."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+
+def opt_config_for(cfg: ModelConfig, **overrides) -> opt.OptConfig:
+    """Per-arch optimizer layout: 671B-scale bf16 models get int8 moments and
+    no fp32 master (the only layout that fits a single v5e pod)."""
+    kw: dict[str, Any] = {}
+    if cfg.param_counts()["total"] > 1e11:
+        kw.update(quantized_moments=True, master_fp32=False)
+    kw.update(overrides)
+    return opt.OptConfig(**kw)
+
+
+def make_train_step(model, opt_cfg: opt.OptConfig, accum_steps: int = 1,
+                    grad_specs=None, mb_specs=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum_steps > 1 runs gradient accumulation: the global batch is split
+    into microbatches scanned sequentially, so the per-layer activation
+    stash is sized by the microbatch (the standard fit mechanism for 1M-token
+    global batches). The grad accumulator carries ZeRO-sharded layout
+    (grad_specs, PartitionSpecs): GSPMD reduce-scatters each microbatch's
+    gradients instead of keeping a replicated f32 accumulator.
+    """
+
+    def grad_fn(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, mb)
+        return grads, {**metrics, "loss": loss}
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            grads, metrics = grad_fn(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]),
+                batch)
+            if mb_specs is not None:
+                # the [accum, B/accum, ...] reshape loses the batch-dim
+                # sharding; re-pin it or GSPMD replicates every microbatch
+                mbs = jax.tree.map(jax.lax.with_sharding_constraint, mbs,
+                                   mb_specs)
+
+            def shard_grads(g):
+                if grad_specs is None:
+                    return g
+                return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                                    grad_specs)
+
+            def body(acc, mb):
+                g, m = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, shard_grads(g))
+                return acc, m
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                 params)
+            grads, ms = jax.lax.scan(body, shard_grads(zeros), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        params, opt_state, om = opt.adamw_update(opt_cfg, params, grads,
+                                                 opt_state)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+#: per-device activation-stash budget for choosing accumulation steps
+STASH_BUDGET_BYTES = 3.0 * 2**30
+STASH_F32_HOIST_FACTOR = 3.0   # observed: XLA hoists an f32 copy of the stash
+
+
+def accum_steps_for(cfg: ModelConfig, global_batch: int, seq: int,
+                    dp_size: int, mp_size: int = 16) -> int:
+    """Smallest power-of-two microbatch count keeping the per-layer scan
+    stash under budget."""
+    if cfg.train_accum_override:
+        return cfg.train_accum_override
+    b_local = max(global_batch // dp_size, 1)
+    per_seq = cfg.num_layers * seq * cfg.d_model * 2 * STASH_F32_HOIST_FACTOR
+    if cfg.seq_shard_activations and seq % mp_size == 0:
+        per_seq /= mp_size
+    n = 1
+    while n < b_local and b_local / n * per_seq > STASH_BUDGET_BYTES:
+        n *= 2
+    return n
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {**metrics, "loss": loss}
+    return eval_step

@@ -1,0 +1,200 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step and
+one decode step on CPU; asserts output shapes and no NaNs (assignment (f))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+
+
+def _batch_for(cfg, b=2, s=16, key=0):
+    rng = np.random.default_rng(key)
+    batch = {}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.enc_frames, cfg.d_model)),
+            jnp.dtype(cfg.compute_dtype))
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        return batch
+    if cfg.frontend == "vision_stub":
+        p = min(cfg.vision_patches, s // 2)
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(b, p, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.compute_dtype))
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s - p)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_smoke_forward_loss(arch):
+    cfg = registry.get_smoke_config(arch)
+    model = registry.make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), (arch, metrics)
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_smoke_grads_finite(arch):
+    cfg = registry.get_smoke_config(arch)
+    model = registry.make_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = _batch_for(cfg)
+    grads = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))(params, batch)
+    flat, _ = jax.tree.flatten(grads)
+    assert all(jnp.isfinite(g).all() for g in flat), arch
+    # at least some gradient signal somewhere
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat), arch
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = registry.get_smoke_config(arch)
+    model = registry.make_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    b, cap = 2, 32
+    if cfg.enc_dec:
+        cache = model.init_cache(params, b, cap, cfg.enc_frames)
+    else:
+        cache = model.init_cache(b, cap)
+    tokens = jnp.ones((b, 1), jnp.int32)
+    step = jax.jit(model.decode_step)
+    logits, cache = step(params, cache, tokens, jnp.int32(0))
+    logits2, cache = step(params, cache, tokens, jnp.int32(1))
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits).all() and jnp.isfinite(logits2).all(), arch
+    # cache actually evolves
+    assert not jax.tree.all(jax.tree.map(
+        lambda a, b_: jnp.array_equal(a, b_), cache,
+        (model.init_cache(params, b, cap, cfg.enc_frames)
+         if cfg.enc_dec else model.init_cache(b, cap))))
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_smoke_prefill(arch):
+    cfg = registry.get_smoke_config(arch)
+    model = registry.make_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    batch = _batch_for(cfg)
+    logits = jax.jit(model.prefill)(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_size
+    assert jnp.isfinite(logits).all(), arch
+
+
+def test_decode_matches_prefill_qwen2():
+    """Decode-step logits must match full-forward logits position by
+    position (cache correctness, non-windowed dense arch)."""
+    cfg = registry.get_smoke_config("qwen2-0.5b")
+    model = registry.make_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    b, s = 2, 8
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (b, s)),
+        jnp.int32)
+    # full forward
+    x = model.embed(params, {"tokens": tokens})
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, _, _ = model.hidden(params, x, pos)
+    full_logits = model.logits(params, h)
+    # token-by-token decode
+    cache = model.init_cache(b, s)
+    outs = []
+    for t in range(s):
+        lg, cache = jax.jit(model.decode_step)(params, cache,
+                                               tokens[:, t:t + 1],
+                                               jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full_logits, np.float32),
+                               np.asarray(dec_logits, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_decode_matches_prefill_mla():
+    """Absorbed-matrix MLA decode must match the materialized training-path
+    attention (deepseek smoke config, dense-layer + MoE layers).
+
+    fp32 compute + no-drop capacity: isolates cache/absorption correctness
+    from bf16 rounding and MoE capacity drops (verified separately)."""
+    import dataclasses
+    cfg = registry.get_smoke_config("deepseek-v3-671b")
+    cfg = dataclasses.replace(
+        cfg, compute_dtype="float32",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = registry.make_model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    b, s = 2, 8
+    tokens = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (b, s)),
+        jnp.int32)
+    x = model.embed(params, {"tokens": tokens})
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, _, _ = model.hidden(params, x, pos)
+    full_logits = model.logits(params, h)
+    cache = model.init_cache(b, s)
+    outs = []
+    for t in range(s):
+        lg, cache = jax.jit(model.decode_step)(params, cache,
+                                               tokens[:, t:t + 1],
+                                               jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full_logits, np.float32),
+                               np.asarray(dec_logits, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_mask_effective():
+    """A token outside the window must not influence the current logits.
+
+    Single layer: with stacked window layers the receptive field legally
+    grows by (window-1) per layer, so only the 1-layer case is a strict
+    no-influence guarantee."""
+    cfg = registry.get_smoke_config("gemma3-27b")
+    cfg = cfg.__class__(**{**cfg.__dict__, "global_every": 0,
+                           "sliding_window": 4, "num_layers": 1,
+                           "compute_dtype": "float32"})
+    model = registry.make_model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    rng = np.random.default_rng(2)
+    t1 = rng.integers(1, cfg.vocab_size, (1, 12))
+    t2 = t1.copy()
+    t2[0, 0] = (t2[0, 0] + 7) % cfg.vocab_size   # mutate a far-past token
+    def last_logits(tok):
+        x = model.embed(params, {"tokens": jnp.asarray(tok, jnp.int32)})
+        pos = jnp.broadcast_to(jnp.arange(12, dtype=jnp.int32), (1, 12))
+        h, _, _ = model.hidden(params, x, pos)
+        return model.logits(params, h)[:, -1]
+    np.testing.assert_allclose(np.asarray(last_logits(t1), np.float32),
+                               np.asarray(last_logits(t2), np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_param_counts_match_assignment():
+    """Total parameter counts are in the right ballpark for the headline
+    sizes (sanity for roofline MODEL_FLOPS)."""
+    expect = {
+        "deepseek-v3-671b": (600e9, 760e9),
+        "gemma3-27b": (23e9, 31e9),
+        "internlm2-20b": (17e9, 23e9),
+        "qwen2-0.5b": (0.4e9, 0.65e9),
+        "gemma-2b": (2.0e9, 3.2e9),
+        "qwen2-vl-7b": (6.5e9, 8.5e9),
+        "hymba-1.5b": (1.1e9, 2.0e9),
+        "xlstm-125m": (0.10e9, 0.20e9),
+        "granite-moe-3b-a800m": (2.5e9, 3.9e9),
+        "whisper-tiny": (0.025e9, 0.06e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = registry.get_config(arch).param_counts()["total"]
+        assert lo <= n <= hi, (arch, f"{n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]")
