@@ -1,0 +1,140 @@
+"""Placement runtime microbenchmarks.
+
+Main event: the batched migration executor (one gather/scatter per array)
+against the seed's per-page ``at[].set`` Python loop, on a 4096-page
+migration — the executor must win by >= 5x (ISSUE acceptance floor; in
+practice the gap is orders of magnitude, since the loop materializes a full
+pool copy per page). Also times policy weight/assignment computation and
+pool allocation throughput.
+
+Run: PYTHONPATH=src python -m benchmarks.placement_bench [--pages 4096]
+Writes benchmarks/results/placement.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.placement import policy as placement_policy
+from repro.placement.executor import MigrationExecutor
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def _time(fn, repeats: int = 1) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_migration(num_moves: int) -> dict:
+    """Move ``num_moves`` pages from the first half of a pool to free pages
+    in the second half — k and v arrays, like a KV pool."""
+    total = 2 * num_moves
+    nl, ps, nkv, hd = 1, 2, 1, 8
+    k = jnp.arange(nl * total * ps * nkv * hd, dtype=jnp.float32).reshape(
+        nl, total, ps, nkv, hd)
+    v = k + 1.0
+    src = np.arange(num_moves, dtype=np.int64)
+    dst = np.arange(num_moves, dtype=np.int64) + num_moves
+    ex = MigrationExecutor()
+
+    t_batched = _time(lambda: ex.execute((k, v), src, dst)[0], repeats=3)
+    t_looped = _time(lambda: ex.execute_looped((k, v), src, dst)[0])
+
+    (bk, bv), _ = ex.execute((k, v), src, dst)
+    (lk, lv), _ = ex.execute_looped((k, v), src, dst)
+    assert bool(jnp.array_equal(bk, lk)) and bool(jnp.array_equal(bv, lv)), \
+        "batched executor diverged from the per-page oracle"
+
+    return {
+        "num_moves": num_moves,
+        "batched_s": t_batched,
+        "per_page_loop_s": t_looped,
+        "speedup": t_looped / max(t_batched, 1e-12),
+    }
+
+
+def bench_policies(num_pages: int = 65536) -> dict:
+    ctx = placement_policy.PlacementContext(
+        bandwidths=np.asarray([819.0, 50.0, 25.0, 12.5, 16.0]),
+        num_pages=num_pages, workers=(0,), dwp=0.4,
+        capacities=np.full(5, num_pages, dtype=np.int64))
+    out = {}
+    for name in placement_policy.available():
+        t0 = time.perf_counter()
+        a = placement_policy.assign(name, ctx)
+        out[name] = {
+            "assign_s": time.perf_counter() - t0,
+            "fractions": (np.bincount(a, minlength=5) / num_pages).tolist(),
+        }
+    return out
+
+
+def bench_alloc(num_pages: int = 4096) -> dict:
+    import dataclasses
+
+    from repro.configs import registry
+    from repro.serve.kvcache import BwapPagePool, MemoryDomain
+
+    cfg = dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                              num_layers=1, compute_dtype="float32")
+    domains = [
+        MemoryDomain("hbm_local", num_pages // 2, 819.0, True),
+        MemoryDomain("hbm_peer", num_pages // 4, 50.0, False),
+        MemoryDomain("host", num_pages - num_pages // 2 - num_pages // 4,
+                     16.0, False),
+    ]
+    pool = BwapPagePool(cfg, domains, page_size=4)
+    t0 = time.perf_counter()
+    ids = [pool.alloc_page() for _ in range(num_pages)]
+    dt = time.perf_counter() - t0
+    assert len(set(ids)) == num_pages
+    return {"pages": num_pages, "alloc_s": dt,
+            "pages_per_s": num_pages / dt}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pages", type=int, default=4096)
+    args = ap.parse_args()
+
+    print(f"migration executor: batched vs per-page loop "
+          f"({args.pages}-page migration)")
+    mig = bench_migration(args.pages)
+    print(f"  batched   {mig['batched_s'] * 1e3:9.2f} ms")
+    print(f"  per-page  {mig['per_page_loop_s'] * 1e3:9.2f} ms")
+    print(f"  -> speedup {mig['speedup']:.1f}x (acceptance floor: 5x)")
+    assert mig["speedup"] >= 5.0, "batched executor under the 5x floor"
+
+    print("\nplacement policies (65536-page assignment):")
+    pol = bench_policies()
+    for name, r in pol.items():
+        frac = ", ".join(f"{f:.2f}" for f in r["fractions"])
+        print(f"  {name:15s} {r['assign_s'] * 1e3:7.2f} ms  [{frac}]")
+
+    print("\npage-pool allocation throughput:")
+    al = bench_alloc()
+    print(f"  {al['pages']} pages in {al['alloc_s'] * 1e3:.1f} ms "
+          f"({al['pages_per_s']:.0f} pages/s)")
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "placement.json").write_text(json.dumps(
+        {"migration": mig, "policies": pol, "alloc": al}, indent=1,
+        default=float))
+    print(f"\n[JSON in {RESULTS / 'placement.json'}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,46 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.placement import policy as placement_policy
+
+
+@dataclasses.dataclass(frozen=True)
+class StagingTier:
+    """A staging target for serialized checkpoint bytes (host DRAM, peer
+    host over DCN, local NVMe, ...)."""
+
+    name: str
+    bw_gbps: float           # drain bandwidth from the accelerator
+    capacity_bytes: int
+
+
+STAGING_PAGE_BYTES = 1 << 20  # placement granularity for staging buffers
+
+
+def plan_staging(leaf_bytes: list[int], tiers: list[StagingTier],
+                 policy: str = "bwap_canonical") -> dict:
+    """Spread serialized checkpoint buffers over staging tiers through the
+    placement policy registry (the same Eq.-1 argument as weighted ZeRO:
+    draining from all tiers in parallel hides the slow tier behind the fast
+    one, rather than filling the fast tier first). Returns per-tier byte
+    totals and the max-parallel-transfer drain-time estimate."""
+    pages = max(1, int(-(-sum(leaf_bytes) // STAGING_PAGE_BYTES)))
+    ctx = placement_policy.PlacementContext(
+        bandwidths=np.asarray([t.bw_gbps for t in tiers]),
+        num_pages=pages, workers=(0,),
+        capacities=np.asarray([t.capacity_bytes // STAGING_PAGE_BYTES
+                               for t in tiers]))
+    counts = placement_policy.resolve(policy).counts(ctx)
+    tier_bytes = counts * STAGING_PAGE_BYTES
+    drain = max(float(b) / (t.bw_gbps * 1e9)
+                for b, t in zip(tier_bytes, tiers))
+    return {
+        "policy": policy,
+        "page_bytes": STAGING_PAGE_BYTES,
+        "tiers": {t.name: int(b) for t, b in zip(tiers, tier_bytes)},
+        "drain_time_s": drain,
+    }
+
 
 def _tree_paths(tree) -> list[str]:
     paths = []
@@ -43,6 +83,8 @@ class CheckpointManager:
     directory: str | pathlib.Path
     keep_last: int = 3
     async_save: bool = False
+    staging_tiers: list[StagingTier] | None = None
+    staging_policy: str = "bwap_canonical"
 
     def __post_init__(self):
         self.directory = pathlib.Path(self.directory)
@@ -82,18 +124,29 @@ class CheckpointManager:
             "paths": _tree_paths(host_tree),
             "leaves": [],
         }
+        leaf_sizes = []
         for i, leaf in enumerate(leaves):
             buf = io.BytesIO()
             np.save(buf, np.asarray(leaf), allow_pickle=False)
             raw = buf.getvalue()
             fname = f"arr_{i:05d}.npy"
             (tmp / fname).write_bytes(raw)
+            leaf_sizes.append(len(raw))
             manifest["leaves"].append({
                 "file": fname,
                 "sha256": _sha256(raw),
                 "shape": list(np.shape(leaf)),
                 "dtype": str(np.asarray(leaf).dtype),
             })
+        if self.staging_tiers:
+            # advisory metadata: an unplaceable staging demand must never
+            # abort the checkpoint itself
+            try:
+                manifest["staging"] = plan_staging(
+                    leaf_sizes, self.staging_tiers, self.staging_policy)
+            except ValueError as e:
+                manifest["staging"] = {"policy": self.staging_policy,
+                                       "error": str(e)}
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
         final = self.directory / name
         if final.exists():

@@ -1,0 +1,20 @@
+"""Unified placement runtime (DESIGN.md §3).
+
+- ``policy``: registry of placement policies (uniform, bwap_canonical,
+  bwap_dwp, local_first) behind one protocol.
+- ``executor``: batched gather/scatter migration of page pools.
+- ``arbiter``: multi-tenant partitioning + co-scheduled DWP tuning.
+- ``telemetry``: per-domain counters and ring-buffer samples.
+"""
+
+from repro.placement import policy
+from repro.placement.executor import MigrationExecutor, MigrationResult
+from repro.placement.telemetry import DomainTelemetry, Ring
+
+__all__ = [
+    "policy",
+    "MigrationExecutor",
+    "MigrationResult",
+    "DomainTelemetry",
+    "Ring",
+]

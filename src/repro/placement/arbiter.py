@@ -1,0 +1,219 @@
+"""Multi-tenant domain arbiter (paper §III-B3 as a runtime service).
+
+Several co-located applications share one machine's memory domains. The
+arbiter owns the capacity ledger: it partitions every domain's pages among
+registered tenants, assigns each tenant a disjoint *home* (worker) domain by
+priority (high-priority tenants claim the fastest unclaimed domain), builds
+each tenant's :class:`BwapPagePool`, and rebalances capacity when tenants
+join or leave (live pools are rebuilt through the batched migration
+executor; engines get an id map to rewrite their page tables).
+
+Best-effort tenants are tuned by the paper's two-stage
+:class:`CoScheduledTuner`: stage 1 raises the tenant's DWP while the
+high-priority tenants' latency stream keeps improving (pulling the tenant's
+pages out of the high-priority home domains), freezing a lower bound when it
+stabilises; stage 2 hill-climbs the tenant's own latency, never dropping
+below the bound. ``observe()`` is the single entry point — feed it each
+tenant's per-step latency and the arbiter routes the streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import interleave
+from repro.core.dwp import CoScheduledTuner, DWPConfig
+from repro.placement import policy as placement_policy
+from repro.placement.telemetry import DomainTelemetry, Ring
+from repro.serve.kvcache import BwapPagePool, MemoryDomain
+
+
+class Priority(enum.Enum):
+    HIGH = "high"
+    BEST_EFFORT = "best_effort"
+
+
+@dataclasses.dataclass(frozen=True)
+class DomainSpec:
+    """One physical memory domain managed by the arbiter."""
+
+    name: str
+    total_pages: int
+    read_bw: float       # GB/s toward the worker chips
+
+
+@dataclasses.dataclass
+class Tenant:
+    name: str
+    priority: Priority
+    share: float
+    quotas: np.ndarray                 # pages per domain owned by this tenant
+    home: tuple[int, ...]              # worker-domain indices
+    pool: BwapPagePool
+    cotuner: CoScheduledTuner | None = None
+    engine: object | None = None       # anything with .remap_pages/.active
+    latency: Ring = dataclasses.field(default_factory=lambda: Ring(64))
+
+    @property
+    def dwp(self) -> float:
+        return float(self.pool.tuner.dwp)
+
+
+class DomainArbiter:
+    """Capacity ledger + tuner router for N tenants over shared domains."""
+
+    def __init__(self, specs: Sequence[DomainSpec], page_size: int = 8,
+                 seed: int = 0):
+        self.specs = list(specs)
+        self.page_size = page_size
+        self.seed = seed
+        self.free = np.asarray([s.total_pages for s in self.specs],
+                               dtype=np.int64)
+        self.bw = np.asarray([s.read_bw for s in self.specs])
+        self.tenants: dict[str, Tenant] = {}
+        self._claimed_homes: set[int] = set()
+
+    # -- registration --------------------------------------------------------
+
+    def _pick_home(self, priority: Priority) -> int:
+        """Fastest domain not yet claimed as another tenant's home; HIGH
+        tenants pick before best-effort ones simply by registering first."""
+        for d in np.argsort(-self.bw, kind="stable"):
+            if int(d) not in self._claimed_homes:
+                return int(d)
+        raise RuntimeError("more tenants than domains: no free home domain")
+
+    def register(self, name: str, cfg, *, priority: Priority,
+                 share: float, dwp_config: DWPConfig | None = None) -> Tenant:
+        """Carve ``share`` of every domain's remaining pages for a new
+        tenant and build its pool (and co-scheduled tuner if best-effort)."""
+        assert name not in self.tenants, f"tenant {name!r} already registered"
+        assert 0.0 < share <= 1.0
+        totals = np.asarray([s.total_pages for s in self.specs])
+        quotas = np.minimum(np.floor(totals * share).astype(np.int64),
+                            self.free)
+        if quotas.sum() == 0:
+            raise RuntimeError("no capacity left for tenant " + name)
+        home = self._pick_home(priority)
+        self._claimed_homes.add(home)
+        domains = [MemoryDomain(s.name, int(q), s.read_bw, i == home)
+                   for i, (s, q) in enumerate(zip(self.specs, quotas))]
+        telemetry = DomainTelemetry([d.name for d in domains])
+        cotuner = None
+        if priority is Priority.BEST_EFFORT:
+            canonical = interleave.normalize(self.bw)
+            cotuner = CoScheduledTuner(
+                canonical, [home], num_pages=4096,
+                config=dwp_config or DWPConfig(n=4, c=1,
+                                               rel_tolerance=0.02),
+                on_migrate=lambda plan: telemetry.record_plan(plan.num_moves))
+        pool = BwapPagePool(cfg, domains, page_size=self.page_size,
+                            dwp_config=dwp_config, seed=self.seed,
+                            tuner=cotuner, telemetry=telemetry)
+        tenant = Tenant(name=name, priority=priority, share=share,
+                        quotas=quotas, home=(home,), pool=pool,
+                        cotuner=cotuner)
+        self.free -= quotas
+        self.tenants[name] = tenant
+        return tenant
+
+    def attach_engine(self, name: str, engine) -> None:
+        self.tenants[name].engine = engine
+
+    def unregister(self, name: str) -> dict[str, np.ndarray]:
+        """Release a tenant's capacity and grow the remaining tenants' pools
+        proportionally to their shares (live pages carried over via one
+        batched copy per pool; attached engines get their tables remapped).
+        Returns the per-tenant page grants."""
+        gone = self.tenants.pop(name)
+        self._claimed_homes.discard(gone.home[0])
+        self.free += gone.quotas
+        grants: dict[str, np.ndarray] = {}
+        rest = list(self.tenants.values())
+        if not rest:
+            return grants
+        total_share = sum(t.share for t in rest)
+        remaining = gone.quotas.copy()
+        for i, t in enumerate(rest):
+            if i == len(rest) - 1:                    # remainder to the last
+                grant = remaining.copy()
+            else:
+                grant = np.minimum(
+                    np.floor(gone.quotas * (t.share / total_share)).astype(
+                        np.int64),
+                    remaining)
+            remaining -= grant
+            id_map = t.pool.rebalance(t.quotas + grant)
+            if t.engine is not None:
+                t.engine.remap_pages(id_map)
+            t.quotas = t.quotas + grant
+            self.free -= grant
+            grants[t.name] = grant
+        return grants
+
+    # -- tuning --------------------------------------------------------------
+
+    def observe(self, name: str, latency: float) -> bool:
+        """Feed one tenant's per-step latency sample. For best-effort
+        tenants this drives the two-stage co-scheduled search: stall_a is
+        the freshest high-priority latency, stall_b the tenant's own. When
+        the tuner moves the allocation cycle, live sequences of an attached
+        engine are migrated (batched) and True is returned."""
+        t = self.tenants[name]
+        t.latency.push(latency)
+        # (not pushed into pool telemetry: the engine already records its
+        # wall+sim latency there; mixing in this analytic stream would
+        # average incommensurate quantities)
+        if t.priority is not Priority.BEST_EFFORT or t.cotuner is None:
+            return False
+        high = [o.latency.last() for o in self.tenants.values()
+                if o.priority is Priority.HIGH and len(o.latency)]
+        stall_a = float(np.mean(high)) if high else 0.0
+        before = t.cotuner.assignment.copy()
+        t.cotuner.record(stall_a, latency)
+        changed = not np.array_equal(before, t.cotuner.assignment)
+        if changed and t.engine is not None:
+            for s in getattr(t.engine, "active", []):
+                s.pages = t.pool.migrate_sequence(s.pages)
+        return changed
+
+    # -- interference model --------------------------------------------------
+
+    def interference(self, name: str, scale: float = 1.0) -> float:
+        """Analytic cross-tenant contention on ``name``'s home domains
+        (Eq.-1 shape): other tenants' resident bytes there, divided by the
+        domain bandwidth. The CPU host has no real memory domains, so this
+        term supplies the co-location signal the paper reads from stall
+        counters — same role as the engine's expected_read_time."""
+        t = self.tenants[name]
+        total = 0.0
+        for d in t.home:
+            for o in self.tenants.values():
+                if o.name == name:
+                    continue
+                pages = int(o.pool.used_pages()[d])
+                total += pages * o.pool.page_bytes / (self.bw[d] * 1e9)
+        return scale * total
+
+    # -- reporting ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        out = {}
+        for t in self.tenants.values():
+            entry = {
+                "priority": t.priority.value,
+                "home": [self.specs[d].name for d in t.home],
+                "quota_pages": int(t.quotas.sum()),
+                "dwp": t.dwp,
+                "latency_mean_s": t.latency.mean(),
+                "occupancy": t.pool.occupancy(),
+            }
+            if t.cotuner is not None:
+                entry["stage"] = t.cotuner.stage
+                entry["dwp_lower_bound"] = t.cotuner.dwp_lower_bound
+            out[t.name] = entry
+        return out

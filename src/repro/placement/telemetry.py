@@ -1,0 +1,128 @@
+"""Per-domain placement telemetry: counters + ring-buffer samples.
+
+One :class:`DomainTelemetry` instance rides along with each page pool (and is
+shared with its MigrationExecutor). Counters are cumulative since creation;
+sample streams (latency, per-domain stall time) live in fixed-size ring
+buffers so a long-running engine never grows memory. ``snapshot()`` is what
+``ServeEngine.step()`` surfaces and what benchmarks/placement_bench.py dumps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+class Ring:
+    """Fixed-capacity overwrite-oldest sample buffer."""
+
+    def __init__(self, capacity: int = 128):
+        assert capacity > 0
+        self._buf = np.zeros(capacity, dtype=np.float64)
+        self._next = 0
+        self._count = 0
+
+    def push(self, value: float) -> None:
+        self._buf[self._next] = float(value)
+        self._next = (self._next + 1) % len(self._buf)
+        self._count = min(self._count + 1, len(self._buf))
+
+    def values(self) -> np.ndarray:
+        """Samples oldest-first."""
+        if self._count < len(self._buf):
+            return self._buf[:self._count].copy()
+        return np.roll(self._buf, -self._next)
+
+    def mean(self) -> float:
+        return float(self.values().mean()) if self._count else 0.0
+
+    def last(self) -> float:
+        return float(self._buf[(self._next - 1) % len(self._buf)]) \
+            if self._count else 0.0
+
+    def __len__(self) -> int:
+        return self._count
+
+
+class DomainTelemetry:
+    """Placement event counters for one pool's memory domains.
+
+    Per-domain: allocs, frees, migrations in/out, bytes in/out, and a ring of
+    analytic stall-time samples (the Eq.-1 per-domain read time the engine
+    computes each step). Global: a latency ring and planned-vs-executed
+    migration counts (the tuner plans logical moves at cycle resolution; the
+    executor reports physically moved pages).
+    """
+
+    def __init__(self, domain_names: Sequence[str], ring_capacity: int = 128):
+        self.domain_names = list(domain_names)
+        n = len(self.domain_names)
+        self.allocs = np.zeros(n, dtype=np.int64)
+        self.frees = np.zeros(n, dtype=np.int64)
+        self.migrations_in = np.zeros(n, dtype=np.int64)
+        self.migrations_out = np.zeros(n, dtype=np.int64)
+        self.bytes_in = np.zeros(n, dtype=np.int64)
+        self.bytes_out = np.zeros(n, dtype=np.int64)
+        self.stall = [Ring(ring_capacity) for _ in range(n)]
+        self.latency = Ring(ring_capacity)
+        self.planned_moves = 0
+        self.executed_moves = 0
+        self.rebalances = 0
+
+    # -- event hooks --------------------------------------------------------
+
+    def record_alloc(self, domain: int, pages: int = 1) -> None:
+        self.allocs[domain] += pages
+
+    def record_free(self, domain: int, pages: int = 1) -> None:
+        self.frees[domain] += pages
+
+    def record_migration(self, src_domain: int, dst_domain: int,
+                         pages: int, nbytes: int) -> None:
+        self.migrations_out[src_domain] += pages
+        self.migrations_in[dst_domain] += pages
+        self.bytes_out[src_domain] += nbytes
+        self.bytes_in[dst_domain] += nbytes
+        self.executed_moves += pages
+
+    def record_plan(self, num_moves: int) -> None:
+        self.planned_moves += num_moves
+
+    def record_latency(self, seconds: float) -> None:
+        self.latency.push(seconds)
+
+    def record_stall(self, domain: int, seconds: float) -> None:
+        self.stall[domain].push(seconds)
+
+    def record_rebalance(self) -> None:
+        self.rebalances += 1
+
+    # -- reporting ----------------------------------------------------------
+
+    @property
+    def bytes_moved(self) -> int:
+        return int(self.bytes_in.sum())
+
+    def snapshot(self) -> dict:
+        domains = {}
+        for i, name in enumerate(self.domain_names):
+            domains[name] = {
+                "allocs": int(self.allocs[i]),
+                "frees": int(self.frees[i]),
+                "migr_in": int(self.migrations_in[i]),
+                "migr_out": int(self.migrations_out[i]),
+                "bytes_in": int(self.bytes_in[i]),
+                "bytes_out": int(self.bytes_out[i]),
+                "stall_mean_s": self.stall[i].mean(),
+            }
+        return {
+            "domains": domains,
+            "latency_mean_s": self.latency.mean(),
+            "latency_last_s": self.latency.last(),
+            "planned_moves": self.planned_moves,
+            "executed_moves": self.executed_moves,
+            "bytes_moved": self.bytes_moved,
+            "rebalances": self.rebalances,
+        }

@@ -80,14 +80,13 @@ class PagedDecoder:
             if cfg.use_rope:
                 q = L.apply_rope(q, pos_b, cfg.rope_theta)
                 k = L.apply_rope(k, pos_b, cfg.rope_theta)
-            # write this token's K/V into its page
-            for i in range(b):
-                page = int(tables[i, positions[i] // ps])
-                slot = int(positions[i] % ps)
-                self.pool.k_pool = self.pool.k_pool.at[l, page, slot].set(
-                    k[i, 0])
-                self.pool.v_pool = self.pool.v_pool.at[l, page, slot].set(
-                    v[i, 0])
+            # write the batch's K/V into its pages: one scatter per layer
+            # (decode hot path — the per-sequence Python loop cost B whole-
+            # pool copies per layer)
+            pages = jnp.take_along_axis(tables, (positions // ps)[:, None],
+                                        axis=1)[:, 0]
+            self.pool.write_decode_batch(l, pages, positions % ps,
+                                         k[:, 0], v[:, 0])
             att = paged_ops.paged_attention(
                 q[:, 0], self.pool.k_pool[l], self.pool.v_pool[l],
                 tables, lens + 1, impl="reference")
@@ -139,15 +138,20 @@ class ServeEngine:
             v = jnp.stack([c["v"][0] for c in kv])
         else:
             k, v = kv["k"][:, 0], kv["v"][:, 0]
-        n_pages = -(-len(seq.tokens) // ps)
+        # Materialize K/V for all prompt tokens but the last: the first
+        # decode step consumes tokens[-1] and writes its K/V at position
+        # len-1 itself. (Writing it here too double-counted the last prompt
+        # token and shifted the decode RoPE position by one.)
+        n_filled = len(seq.tokens) - 1
+        n_pages = -(-n_filled // ps)
         seq.pages = [self.pool.alloc_page() for _ in range(n_pages)]
         for pi, pid in enumerate(seq.pages):
-            lo, hi = pi * ps, min((pi + 1) * ps, len(seq.tokens))
+            lo, hi = pi * ps, min((pi + 1) * ps, n_filled)
             self.pool.k_pool = self.pool.k_pool.at[:, pid, :hi - lo].set(
                 k[:, lo:hi])
             self.pool.v_pool = self.pool.v_pool.at[:, pid, :hi - lo].set(
                 v[:, lo:hi])
-        seq.length = len(seq.tokens)
+        seq.length = n_filled
 
     def step(self) -> dict:
         while self.waiting and len(self.active) < self.max_batch:
@@ -185,10 +189,22 @@ class ServeEngine:
         sim = max(self.pool.expected_read_time(
             [p for s in self.active for p in s.pages]), 0.0)
         self.latencies.append(wall + sim)
-        self.pool.record_latency(wall + sim)
+        if self.pool.record_latency(wall + sim):
+            # the tuner moved the allocation cycle: re-home live sequences
+            # (batched gather/scatter through the migration executor)
+            for s in self.active:
+                s.pages = self.pool.migrate_sequence(s.pages)
         return {"active": len(self.active), "latency": wall + sim,
                 "dwp": self.pool.tuner.dwp,
-                "occupancy": self.pool.occupancy()}
+                "occupancy": self.pool.occupancy(),
+                "telemetry": self.pool.telemetry.snapshot()}
+
+    def remap_pages(self, id_map: np.ndarray) -> None:
+        """Rewrite page tables after the pool was rebalanced (arbiter
+        capacity change): old page id -> new page id."""
+        for s in self.active:
+            s.pages = [int(id_map[p]) for p in s.pages]
+            assert all(p >= 0 for p in s.pages), "live page lost in rebalance"
 
     def _finish(self, s: Sequence_):
         s.done = True

@@ -3,14 +3,17 @@
 The paper's mechanism, applied to serving: decode-time KV pages live in a
 pool that spans memory *domains* of asymmetric bandwidth (local HBM, pod-peer
 HBM over ICI, cross-pod HBM over DCI, host DRAM — topology.tpu_domains_topology).
-Placement of new pages follows the canonical weights (Eq. 2/5: w_d ∝ bw_d);
-the DWP tuner shifts the worker-local fraction online from measured decode
-latencies, migrating pages between domains exactly like mbind page migration.
+Placement of new pages follows a policy from the placement registry
+(default ``bwap_dwp``: Eq. 2/5 canonical weights scaled by the DWP tuner's
+online proximity estimate); migrations between domains execute as batched
+gather/scatter through placement.executor, exactly like mbind page migration
+but one XLA op per batch instead of one copy per page.
 
 Physically the pool is one array [total_pages, page_size, nkv, hd] per layer;
 domain d owns the contiguous page-id range [offset_d, offset_d + n_d), so the
 paged_attention kernel (kernels/paged_attention) is domain-oblivious and the
-page table *is* the placement.
+page table *is* the placement. Per-domain counters and stall samples are
+collected in placement.telemetry (DESIGN.md §3.4).
 """
 
 from __future__ import annotations
@@ -22,9 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bwmodel, interleave
+from repro.core import interleave
 from repro.core.dwp import DWPConfig, DWPTuner
 from repro.models.config import ModelConfig
+from repro.placement import policy as placement_policy
+from repro.placement.executor import MigrationExecutor
+from repro.placement.telemetry import DomainTelemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,15 +58,23 @@ def default_domains(total_pages: int) -> list[MemoryDomain]:
 
 
 class BwapPagePool:
-    """Paged KV storage with BWAP placement. One pool per model (layers
-    stacked on axis 0 so a layer's pool is pool[l])."""
+    """Paged KV storage with policy-driven placement. One pool per model
+    (layers stacked on axis 0 so a layer's pool is pool[l]).
+
+    ``tuner`` may be supplied externally (the domain arbiter passes a
+    CoScheduledTuner for best-effort tenants); anything with ``.assignment``
+    and ``.dwp`` works. When external, ``record_latency`` does not feed it —
+    the owner (arbiter) drives it with the right stall streams.
+    """
 
     def __init__(self, cfg: ModelConfig, domains: Sequence[MemoryDomain],
                  page_size: int = 16, dwp_config: DWPConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, policy: str = "bwap_dwp",
+                 tuner=None, telemetry: DomainTelemetry | None = None):
         self.cfg = cfg
         self.domains = list(domains)
         self.page_size = page_size
+        self.policy = placement_policy.resolve(policy)
         self.total_pages = sum(d.num_pages for d in self.domains)
         self.offsets = np.cumsum([0] + [d.num_pages for d in self.domains])
         cdt = jnp.dtype(cfg.compute_dtype)
@@ -72,25 +86,49 @@ class BwapPagePool:
             list(range(self.offsets[i], self.offsets[i + 1]))
             for i in range(len(self.domains))]
 
+        self.bw = np.asarray([d.read_bw for d in self.domains])
+        # bandwidth-descending fallback order for exhausted allocation cycles
+        # (computed once; alloc_page is on the decode hot path)
+        self._bw_order = [int(i) for i in np.argsort(-self.bw, kind="stable")]
+        self.workers = tuple(i for i, d in enumerate(self.domains)
+                             if d.is_worker)
         # canonical weights over domains (Eq. 2: single worker group)
-        bw = np.asarray([d.read_bw for d in self.domains])
-        self.canonical = bw / bw.sum()
-        workers = [i for i, d in enumerate(self.domains) if d.is_worker]
-        self.tuner = DWPTuner(self.canonical, workers,
-                              num_pages=4096,  # allocation-cycle resolution
-                              config=dwp_config or DWPConfig(n=8, c=2),
-                              on_migrate=lambda plan: None)
+        self.canonical = placement_policy.weights(
+            "bwap_canonical", self._ctx(0.0))
+        self.telemetry = telemetry or DomainTelemetry(
+            [d.name for d in self.domains])
+        self.executor = MigrationExecutor(telemetry=self.telemetry)
+        self._external_tuner = tuner is not None
+        self.tuner = tuner if tuner is not None else DWPTuner(
+            self.canonical, list(self.workers),
+            num_pages=4096,  # allocation-cycle resolution
+            config=dwp_config or DWPConfig(n=8, c=2),
+            on_migrate=self._on_tuner_plan)
         self._cycle_pos = 0
         # Alg. 1 lays sub-ranges out contiguously (uniform region first); an
-        # allocation cycle must be stationary, so walk it in a fixed shuffle.
-        self._perm = np.random.default_rng(seed).permutation(4096)
+        # allocation cycle must be stationary, so walk it in a fixed shuffle
+        # (sized to the tuner's actual cycle — external tuners may differ
+        # from the internal 4096-slot resolution).
+        self._perm = np.random.default_rng(seed).permutation(
+            len(self.tuner.assignment))
 
     # -- placement ----------------------------------------------------------
 
+    def _ctx(self, dwp: float) -> placement_policy.PlacementContext:
+        return placement_policy.PlacementContext(
+            bandwidths=np.asarray([d.read_bw for d in self.domains]),
+            num_pages=self.total_pages,
+            workers=tuple(i for i, d in enumerate(self.domains)
+                          if d.is_worker),
+            dwp=dwp,
+            capacities=np.asarray([d.num_pages for d in self.domains]))
+
     @property
     def weights(self) -> np.ndarray:
-        return interleave.dwp_weights(self.canonical, self.tuner.workers,
-                                      self.tuner.dwp)
+        return self.policy.weights(self._ctx(float(self.tuner.dwp)))
+
+    def _on_tuner_plan(self, plan: interleave.MigrationPlan) -> None:
+        self.telemetry.record_plan(plan.num_moves)
 
     def domain_of(self, page_id: int) -> int:
         return int(np.searchsorted(self.offsets, page_id, side="right") - 1)
@@ -98,22 +136,25 @@ class BwapPagePool:
     def alloc_page(self) -> int:
         """Next page id, following the weighted allocation cycle (Alg. 1
         pattern over the tuner's current assignment); falls back to the
-        closest domain with free pages."""
+        closest domain with free pages (precomputed bandwidth order)."""
         cycle = self.tuner.assignment
         for _ in range(len(cycle)):
             want = int(cycle[self._perm[self._cycle_pos % len(self._perm)]])
             self._cycle_pos += 1
             if self.free[want]:
+                self.telemetry.record_alloc(want)
                 return self.free[want].pop()
-        for i in np.argsort(-np.asarray(
-                [d.read_bw for d in self.domains])):
+        for i in self._bw_order:
             if self.free[i]:
-                return self.free[int(i)].pop()
+                self.telemetry.record_alloc(i)
+                return self.free[i].pop()
         raise RuntimeError("KV pool exhausted")
 
     def free_pages(self, pages: Sequence[int]):
         for pid in pages:
-            self.free[self.domain_of(pid)].append(int(pid))
+            dom = self.domain_of(pid)
+            self.free[dom].append(int(pid))
+            self.telemetry.record_free(dom)
 
     # -- data path ------------------------------------------------------------
 
@@ -124,36 +165,113 @@ class BwapPagePool:
         self.k_pool = self.k_pool.at[:, page_id, slot].set(k)
         self.v_pool = self.v_pool.at[:, page_id, slot].set(v)
 
+    def write_decode_batch(self, layer: int, page_ids, slots, k, v):
+        """Scatter a whole decode batch's K/V for one layer in one op:
+        page_ids/slots [B], k/v [B, nkv, hd]."""
+        self.k_pool = self.k_pool.at[layer, page_ids, slots].set(k)
+        self.v_pool = self.v_pool.at[layer, page_ids, slots].set(v)
+
     # -- DWP tuning / migration -------------------------------------------------
 
-    def record_latency(self, seconds: float):
-        """Feed a decode-step latency sample; executes migrations when the
-        tuner moves DWP (pages are re-homed between domain ranges)."""
+    def record_latency(self, seconds: float) -> bool:
+        """Feed a decode-step latency sample; returns True when the tuner
+        moved the allocation cycle (callers then migrate live sequences).
+        Externally-tuned pools (arbiter tenants) only log the sample — the
+        arbiter feeds the co-scheduled tuner with the right stall streams."""
+        self.telemetry.record_latency(seconds)
+        if self._external_tuner:
+            return False
         before = self.tuner.assignment.copy()
         self.tuner.record(seconds)
-        after = self.tuner.assignment
-        if not np.array_equal(before, after):
-            return True  # cycle changed; future allocations follow it
-        return False
+        return not np.array_equal(before, self.tuner.assignment)
 
     def migrate_sequence(self, page_ids: list[int]) -> list[int]:
         """Re-place an existing sequence's pages per the current weights
-        (the incremental migration of §III-B2): returns new page ids."""
+        (the incremental migration of §III-B2): returns new page ids.
+        All physical copies happen in one batched gather/scatter."""
         target = interleave.weighted_interleave(len(page_ids), self.weights)
-        new_ids = []
-        moved = 0
+        new_ids: list[int] = []
+        src: list[int] = []
+        dst: list[int] = []
         for pid, dom in zip(page_ids, target):
             cur = self.domain_of(pid)
             if cur == int(dom) or not self.free[int(dom)]:
-                new_ids.append(pid)
+                new_ids.append(int(pid))
                 continue
             nid = self.free[int(dom)].pop()
-            self.k_pool = self.k_pool.at[:, nid].set(self.k_pool[:, pid])
-            self.v_pool = self.v_pool.at[:, nid].set(self.v_pool[:, pid])
-            self.free[cur].append(pid)
+            src.append(int(pid))
+            dst.append(nid)
             new_ids.append(nid)
-            moved += 1
+        if src:
+            (self.k_pool, self.v_pool), _ = self.executor.execute(
+                (self.k_pool, self.v_pool), src, dst,
+                src_domains=[self.domain_of(p) for p in src],
+                dst_domains=[self.domain_of(p) for p in dst])
+            for pid in src:  # release sources only after the batched copy
+                self.free[self.domain_of(pid)].append(pid)
         return new_ids
+
+    # -- capacity (arbiter rebalancing) ---------------------------------------
+
+    def live_pages(self) -> list[list[int]]:
+        """Allocated page ids per domain, ascending."""
+        out = []
+        for i in range(len(self.domains)):
+            free = set(self.free[i])
+            out.append([p for p in range(self.offsets[i], self.offsets[i + 1])
+                        if p not in free])
+        return out
+
+    def rebalance(self, new_sizes: Sequence[int]) -> np.ndarray:
+        """Resize per-domain capacity (tenant join/leave): rebuilds the pool
+        arrays at the new sizes, carrying live pages over in one batched
+        copy. Live pages that no longer fit their domain spill to the
+        fastest domain with room. Returns ``id_map`` (old page id -> new page
+        id, -1 for pages that were free) so engines can remap page tables."""
+        new_sizes = [int(n) for n in new_sizes]
+        assert len(new_sizes) == len(self.domains)
+        live = self.live_pages()
+        new_offsets = np.cumsum([0] + new_sizes)
+        placed: list[list[int]] = [[] for _ in self.domains]  # old ids per new domain
+        overflow: list[int] = []
+        for d, pages in enumerate(live):
+            placed[d] = pages[:new_sizes[d]]
+            overflow.extend(pages[new_sizes[d]:])
+        for pid in overflow:
+            for d in self._bw_order:
+                if len(placed[d]) < new_sizes[d]:
+                    placed[d].append(pid)
+                    break
+            else:
+                raise ValueError("rebalance: live pages exceed new capacity")
+        old_ids: list[int] = []
+        new_ids: list[int] = []
+        for d, pages in enumerate(placed):
+            old_ids.extend(pages)
+            new_ids.extend(range(int(new_offsets[d]),
+                                 int(new_offsets[d]) + len(pages)))
+        total = int(new_offsets[-1])
+        nl, ps = self.cfg.num_layers, self.page_size
+        nkv, hd = self.cfg.num_kv_heads, self.cfg.head_dim_
+        new_k = jnp.zeros((nl, total, ps, nkv, hd), self.k_pool.dtype)
+        new_v = jnp.zeros_like(new_k)
+        (self.k_pool, self.v_pool), _ = self.executor.copy(
+            (self.k_pool, self.v_pool), (new_k, new_v), old_ids, new_ids)
+        id_map = np.full(self.total_pages, -1, dtype=np.int64)
+        id_map[np.asarray(old_ids, dtype=np.int64)] = new_ids
+        self.domains = [dataclasses.replace(d, num_pages=n)
+                        for d, n in zip(self.domains, new_sizes)]
+        self.total_pages = total
+        self.offsets = new_offsets
+        taken = [set(range(int(new_offsets[d]),
+                           int(new_offsets[d]) + len(placed[d])))
+                 for d in range(len(self.domains))]
+        self.free = [[p for p in range(int(new_offsets[d]),
+                                       int(new_offsets[d + 1]))
+                      if p not in taken[d]]
+                     for d in range(len(self.domains))]
+        self.telemetry.record_rebalance()
+        return id_map
 
     # -- analytics ---------------------------------------------------------------
 
@@ -164,15 +282,26 @@ class BwapPagePool:
             out[d.name] = used / max(d.num_pages, 1)
         return out
 
+    def used_pages(self) -> np.ndarray:
+        return np.asarray([d.num_pages - len(self.free[i])
+                           for i, d in enumerate(self.domains)])
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes of one page across all layers, K+V."""
+        nkv, hd = self.cfg.num_kv_heads, self.cfg.head_dim_
+        return (2 * self.page_size * nkv * hd * self.k_pool.dtype.itemsize
+                * self.cfg.num_layers)
+
     def expected_read_time(self, page_ids: Sequence[int]) -> float:
         """Analytic per-token KV read time for a sequence (the max-parallel-
-        transfer model of Eq. 1): bytes per domain / domain bw, max."""
-        nkv, hd = self.cfg.num_kv_heads, self.cfg.head_dim_
-        bytes_per_page = 2 * self.page_size * nkv * hd * 2  # k+v bf16
+        transfer model of Eq. 1): bytes per domain / domain bw, max. Feeds
+        per-domain stall samples into telemetry."""
         per_domain = np.zeros(len(self.domains))
-        for pid in page_ids:
-            per_domain[self.domain_of(pid)] += bytes_per_page
-        per_domain *= self.cfg.num_layers
+        for pid in page_ids:   # page_bytes: K+V, all layers, actual dtype
+            per_domain[self.domain_of(pid)] += self.page_bytes
         times = per_domain / (np.asarray(
             [d.read_bw for d in self.domains]) * 1e9)
+        for d, t in enumerate(times):
+            self.telemetry.record_stall(d, float(t))
         return float(times.max()) if len(page_ids) else 0.0

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import interleave
+from repro.placement import policy as placement_policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +35,14 @@ class TierSpec:
     name: str
     bw_gbps: float        # stream bandwidth toward the compute chip
     capacity_pages: int
+
+
+def _ctx(num_pages: int, tiers: list[TierSpec],
+         dwp: float = 0.0) -> placement_policy.PlacementContext:
+    return placement_policy.PlacementContext(
+        bandwidths=np.asarray([t.bw_gbps for t in tiers]),
+        num_pages=num_pages, workers=(0,), dwp=dwp,
+        capacities=np.asarray([t.capacity_pages for t in tiers]))
 
 
 def weighted_page_partition(num_pages: int, weights) -> np.ndarray:
@@ -44,38 +53,11 @@ def weighted_page_partition(num_pages: int, weights) -> np.ndarray:
 
 def tier_split(num_pages: int, tiers: list[TierSpec],
                dwp: float = 0.0) -> np.ndarray:
-    """Optimizer pages over memory tiers: canonical weights ∝ bw, DWP
-    shifts mass toward tier 0 (the worker-local HBM)."""
-    bw = np.asarray([t.bw_gbps for t in tiers], dtype=np.float64)
-    canon = bw / bw.sum()
-    w = interleave.dwp_weights(canon, [0], dwp)
-    # capacity clamp: overflow spills to non-full tiers ∝ their bandwidth
-    # (keeps Eq.-1 transfer times balanced under capacity pressure)
-    counts = np.round(w * num_pages).astype(int)
-    for _ in range(len(tiers)):
-        over = False
-        for i in np.argsort(-bw):
-            cap = tiers[int(i)].capacity_pages
-            if counts[i] > cap:
-                spill = counts[i] - cap
-                counts[i] = cap
-                room = np.asarray([tiers[j].capacity_pages - counts[j]
-                                   for j in range(len(tiers))], float)
-                room[i] = 0
-                give_w = np.where(room > 0, bw, 0.0)
-                if give_w.sum() <= 0:
-                    break
-                give = np.minimum(room, np.round(
-                    spill * give_w / give_w.sum()))
-                counts += give.astype(int)
-                counts[int(np.argmax(room - give))] += spill \
-                    - int(give.sum())
-                over = True
-        if not over:
-            break
-    counts[-1] += num_pages - counts.sum()
-    return weighted_page_partition(num_pages,
-                                   np.maximum(counts, 0) + 1e-9)
+    """Optimizer pages over memory tiers: the registry's ``bwap_dwp`` policy
+    (canonical weights ∝ bw, DWP shifts mass toward tier 0 — the
+    worker-local HBM); capacity overflow spills ∝ bandwidth, keeping Eq.-1
+    transfer times balanced under pressure."""
+    return placement_policy.assign("bwap_dwp", _ctx(num_pages, tiers, dwp))
 
 
 def stream_update_time(assignment: np.ndarray, tiers: list[TierSpec],
@@ -92,23 +74,12 @@ def stream_update_time(assignment: np.ndarray, tiers: list[TierSpec],
 def uniform_split(num_pages: int, tiers: list[TierSpec]) -> np.ndarray:
     """The uniform-workers analogue: spread evenly over tiers (subject to
     capacity), ignoring bandwidth."""
-    caps = np.asarray([t.capacity_pages for t in tiers], dtype=np.float64)
-    w = np.minimum(np.full(len(tiers), num_pages / len(tiers)), caps)
-    w[-1] += num_pages - w.sum()
-    return weighted_page_partition(num_pages, np.maximum(w, 1e-9))
+    return placement_policy.assign("uniform", _ctx(num_pages, tiers))
 
 
 def hbm_first_split(num_pages: int, tiers: list[TierSpec]) -> np.ndarray:
     """The first-touch analogue: fill the fastest tier, then spill."""
-    counts = np.zeros(len(tiers))
-    left = num_pages
-    for i in np.argsort(-np.asarray([t.bw_gbps for t in tiers])):
-        take = min(left, tiers[int(i)].capacity_pages)
-        counts[int(i)] = take
-        left -= take
-        if left <= 0:
-            break
-    return weighted_page_partition(num_pages, np.maximum(counts, 1e-9))
+    return placement_policy.assign("local_first", _ctx(num_pages, tiers))
 
 
 # ---------------------------------------------------------------------------
