@@ -115,6 +115,13 @@ def main() -> None:
           f"(x{ot['speedup_vs_uniform']:.2f} / "
           f"x{ot['speedup_vs_peer_first']:.2f})")
 
+    _hdr("Scheduler — goodput vs swap placement (oversubscribed KV)")
+    from benchmarks import scheduler_bench
+    # check=False: the sweep accepts arbitrary --seed values; the hard
+    # goodput gate runs on the benchmark's own (CI) entry point
+    scheduler_bench.compare(requests=8, max_new=12, seed=args.seed,
+                            check=False)
+
     if not args.skip_dryrun_table:
         _hdr("Dry-run + roofline aggregation")
         from benchmarks import roofline_table

@@ -1,0 +1,155 @@
+"""Scheduler benchmark: goodput vs swap-placement policy.
+
+The scenario the subsystem exists for: total KV footprint over-subscribes
+``hbm_local`` (and the unreserved pool), so the run completes only through
+preemption — and *where* the victims' pages park decides how much virtual
+time the swap transfers burn. Three placements over the slow domains:
+
+- ``bwap_canonical`` — spread ∝ slow-domain bandwidth (Eq. 2 over the slow
+  subspace): transfers overlap across domains, Eq.-1 time ~ bytes / Σbw.
+- ``local_first``    — everything into the fastest slow domain until full:
+  one domain serializes the transfer, time ~ bytes / bw_max.
+- ``uniform``        — equal spread: the slowest domain gates the batch.
+
+Everything is virtual-clock deterministic (``wall_clock=False`` + a fixed
+per-step compute stand-in), so the goodput ordering is a property of the
+placement, not of host noise. Acceptance (ISSUE 2): zero failed requests in
+every config, and BWAP-weighted swap beats ``local_first`` on goodput.
+
+Run: PYTHONPATH=src python -m benchmarks.scheduler_bench [--requests 12]
+Writes benchmarks/results/scheduler.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.dwp import DWPConfig
+from repro.models.lm import LM
+from repro.scheduler import (KVSwapManager, PriorityClass, RequestScheduler,
+                             SloSpec, WorkloadSpec, generate, total_kv_pages)
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import BwapPagePool, MemoryDomain
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+PLACEMENTS = ("bwap_canonical", "local_first", "uniform")
+
+
+def _domains():
+    """Slow bandwidths scaled so one sequence's swap transfer is
+    commensurate with a few decode steps — placement quality must show up
+    in the clock. Page size is 4 below, so sequences span 8-16 pages and
+    the per-domain split has room to differ between policies."""
+    return [
+        MemoryDomain("hbm_local", 20, 819.0, True),
+        MemoryDomain("hbm_peer_1hop", 30, 0.00125, False),
+        MemoryDomain("hbm_pod1_dci", 30, 0.000325, False),
+        MemoryDomain("host_dram", 80, 0.0004, False),
+    ]
+
+
+def run_config(placement: str, cfg, params, trace, *, max_new: int,
+               sim_step_s: float = 0.005) -> dict:
+    pool = BwapPagePool(cfg, _domains(), page_size=4,
+                        dwp_config=DWPConfig(n=10 ** 6, c=1))  # tuner frozen
+    swap = KVSwapManager(pool, placement=placement, reserve_fraction=0.95)
+    sched = RequestScheduler(
+        pool, max_batch=6, prefill_token_budget=32,
+        classes=[PriorityClass("interactive", 2,
+                               SloSpec(ttft_s=0.3, tpot_s=0.03)),
+                 PriorityClass("batch", 0,
+                               SloSpec(ttft_s=1.5, tpot_s=0.06))],
+        default_class="batch", default_max_new=max_new, swap=swap)
+    eng = ServeEngine(cfg, params, pool, scheduler=sched, wall_clock=False,
+                      sim_step_s=sim_step_s)
+    for t in trace:
+        eng.submit(t.prompt, cls=t.cls, max_new=t.max_new,
+                   arrival_s=t.arrival_s)
+    steps = 0
+    while (eng.active or eng.waiting) and steps < 3000:
+        eng.step()
+        steps += 1
+    tel = pool.telemetry.snapshot()
+    slo = sched.slo.summary(sched.now)
+    return {
+        "placement": placement,
+        "finished": len(eng.finished),
+        "requests": len(trace),
+        "failed": len(trace) - len(eng.finished),
+        "steps": steps,
+        "makespan_s": sched.now,
+        "swap_pages": tel["swap_outs"],
+        "swap_seconds": tel["swap_seconds"],
+        "goodput_tok_s": slo["goodput_tok_s"],
+        "good_tokens": slo["good_tokens"],
+        "classes": slo["classes"],
+    }
+
+
+def compare(requests: int = 12, max_new: int = 24, seed: int = 0,
+            check: bool = True) -> dict:
+    """Run every placement on one trace, print the table, enforce the
+    acceptance criteria, dump JSON. Used by __main__ and benchmarks.run."""
+    cfg = dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                              num_layers=1, compute_dtype="float32")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = generate(WorkloadSpec(
+        kind="bursty", num_requests=requests,
+        mean_interarrival_s=0.01, prompt_mean=24, prompt_max=40,
+        max_new=max_new, vocab_size=cfg.vocab_size,
+        class_mix=(("interactive", 0.25), ("batch", 0.75)), seed=seed))
+    hbm = _domains()[0].num_pages
+    footprint = total_kv_pages(trace, 4)
+    print(f"workload: {len(trace)} requests, KV footprint {footprint} pages "
+          f"vs hbm_local {hbm} (x{footprint / hbm:.1f} oversubscribed)")
+
+    rows = {}
+    for placement in PLACEMENTS:
+        r = run_config(placement, cfg, params, trace, max_new=max_new)
+        rows[placement] = r
+        print(f"  {placement:15s} goodput {r['goodput_tok_s']:7.1f} tok/s  "
+              f"makespan {r['makespan_s']:.2f}s  swaps {r['swap_pages']:3d} "
+              f"pages ({r['swap_seconds'] * 1e3:6.0f} ms)  "
+              f"failed {r['failed']}")
+
+    bwap = rows["bwap_canonical"]["goodput_tok_s"]
+    lf = rows["local_first"]["goodput_tok_s"]
+    print(f"-> BWAP-weighted swap vs local_first: "
+          f"{bwap / max(lf, 1e-9):.3f}x goodput")
+    if check:
+        for placement, r in rows.items():
+            assert r["failed"] == 0, \
+                f"{placement}: {r['failed']} requests failed under swap"
+        assert rows["bwap_canonical"]["swap_pages"] > 0, \
+            "benchmark exerted no memory pressure — nothing was swapped"
+        assert bwap > lf, (
+            f"BWAP swap placement must beat local_first on goodput "
+            f"(got {bwap:.1f} vs {lf:.1f} tok/s)")
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "scheduler.json").write_text(
+        json.dumps(rows, indent=1, default=float))
+    print(f"[JSON in {RESULTS / 'scheduler.json'}]")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--new", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    compare(args.requests, args.new, args.seed)
+
+
+if __name__ == "__main__":
+    main()

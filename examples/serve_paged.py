@@ -1,9 +1,13 @@
-"""End-to-end serving driver: batched requests through the BWAP page pool.
+"""End-to-end serving driver: scheduler-paced requests over the BWAP pool.
 
-Continuous batching + paged attention + weighted page placement across
-memory domains + online DWP tuning from measured decode latencies.
+Oversubscribed by construction: the trace's total KV footprint exceeds
+``hbm_local`` (and the unreserved pool), so completion *requires* the
+scheduler's preemption path — cold sequences park in BWAP-weighted slow
+domains (reserved swap slots) and resume later. Priority classes
+("interactive" with tight deadlines, "batch" without) drive victim
+selection; the run ends with a per-class SLO summary.
 
-    PYTHONPATH=src python examples/serve_paged.py [--requests 6] [--new 24]
+    PYTHONPATH=src python examples/serve_paged.py [--requests 10] [--new 12]
 """
 
 import argparse
@@ -15,15 +19,20 @@ import numpy as np
 from repro.configs import registry
 from repro.core.dwp import DWPConfig
 from repro.models.lm import LM
+from repro.scheduler import (KVSwapManager, PriorityClass, RequestScheduler,
+                             SloSpec, WorkloadSpec, generate, total_kv_pages)
 from repro.serve.engine import ServeEngine
 from repro.serve.kvcache import BwapPagePool, MemoryDomain
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--new", type=int, default=24)
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--kind", default="bursty",
+                    choices=["poisson", "bursty", "heavy_tail"])
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
@@ -31,41 +40,74 @@ def main():
     model = LM(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    # slow-domain bandwidths scaled into the engine-latency range so the
+    # Eq.-1 terms (KV reads, swap transfers) are visible on a CPU host
     domains = [
-        MemoryDomain("hbm_local", 96, 819.0, True),
-        MemoryDomain("hbm_peer_1hop", 64, 50.0, False),
-        MemoryDomain("hbm_pod1_dci", 48, 12.5, False),
-        MemoryDomain("host_dram", 256, 16.0, False),
+        MemoryDomain("hbm_local", 12, 819.0, True),
+        MemoryDomain("hbm_peer_1hop", 12, 0.05, False),
+        MemoryDomain("hbm_pod1_dci", 12, 0.0125, False),
+        MemoryDomain("host_dram", 64, 0.016, False),
     ]
     pool = BwapPagePool(cfg, domains, page_size=8,
                         dwp_config=DWPConfig(n=6, c=1))
-    eng = ServeEngine(cfg, params, pool, max_batch=4, max_new=args.new)
+    swap = KVSwapManager(pool, placement="bwap_canonical",
+                         reserve_fraction=0.95)
+    sched = RequestScheduler(
+        pool, max_batch=6, prefill_token_budget=32,
+        classes=[PriorityClass("interactive", 2, SloSpec(ttft_s=0.5,
+                                                         tpot_s=0.1)),
+                 PriorityClass("batch", 0)],
+        default_class="batch", default_max_new=args.new, swap=swap)
+    # virtual clock on the Eq.-1 analytic terms + a 20 ms compute stand-in:
+    # wall time on a CPU host is dominated by jit compiles and would drown
+    # the SLO numbers in noise
+    eng = ServeEngine(cfg, params, pool, scheduler=sched, wall_clock=False,
+                      sim_step_s=0.02)
 
-    rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        eng.submit(rng.integers(1, cfg.vocab_size, 12).tolist())
+    trace = generate(WorkloadSpec(
+        kind=args.kind, num_requests=args.requests,
+        mean_interarrival_s=0.01, prompt_mean=14, prompt_max=40,
+        max_new=args.new, vocab_size=cfg.vocab_size,
+        class_mix=(("interactive", 0.3), ("batch", 0.7)), seed=args.seed))
+    footprint = total_kv_pages(trace, pool.page_size)
+    print(f"workload: {len(trace)} requests ({args.kind}), KV footprint "
+          f"{footprint} pages vs hbm_local {domains[0].num_pages} "
+          f"(oversubscription x{footprint / domains[0].num_pages:.1f}); "
+          f"unreserved pool {pool.free_count()}, swap slots "
+          f"{swap.reserved_total}")
+    for t in trace:
+        eng.submit(t.prompt, cls=t.cls, max_new=t.max_new,
+                   arrival_s=t.arrival_s)
 
-    print(f"canonical domain weights: "
-          + ", ".join(f"{d.name}={w:.3f}"
-                      for d, w in zip(domains, pool.canonical)))
     step = 0
     while eng.active or eng.waiting:
         info = eng.step()
         step += 1
-        if step % 8 == 0 or not eng.active:
+        if step % 8 == 0 or not (eng.active or eng.waiting):
             occ = " ".join(f"{k}={v:.0%}"
                            for k, v in info.get("occupancy", {}).items())
             print(f"step {step:3d} active={info['active']} "
+                  f"swapped={info.get('swapped', 0)} "
                   f"lat={info.get('latency', 0) * 1e3:6.1f} ms "
                   f"dwp={info.get('dwp', 0):.1f}  {occ}")
-        if step > 400:
+        if step > 800:
             break
-    print(f"\nfinished {len(eng.finished)} sequences; "
-          f"mean latency {np.mean(eng.latencies) * 1e3:.1f} ms; "
-          f"final DWP {pool.tuner.dwp:.1f}")
+
+    tel = pool.telemetry.snapshot()
+    slo = sched.slo.summary(sched.now)
+    print(f"\nfinished {len(eng.finished)}/{len(trace)} sequences in "
+          f"{sched.now:.2f} virtual s; swaps {tel['swap_outs']} out / "
+          f"{tel['swap_ins']} in ({tel['swap_seconds'] * 1e3:.0f} ms "
+          f"transfer); goodput {slo['goodput_tok_s']:.0f} good tok/s")
+    for cls, row in slo["classes"].items():
+        print(f"  {cls:12s} done {row['completed']:3d}/{row['submitted']:3d}"
+              f"  good {row['good']:3d}  ttft {row['ttft_mean_s'] * 1e3:7.1f}"
+              f" ms (p95 {row['ttft_p95_s'] * 1e3:7.1f})  tpot "
+              f"{row['tpot_mean_s'] * 1e3:6.1f} ms  preempted "
+              f"{row['preemptions']}")
     for s in eng.finished[:3]:
-        print(f"  seq {s.sid}: {s.tokens[:6]}... -> "
-              f"{s.tokens[s.prompt_len:s.prompt_len + 6]}...")
+        print(f"  seq {s.sid} [{s.cls}]: {s.tokens[:5]}... -> "
+              f"{s.tokens[s.prompt_len:s.prompt_len + 5]}...")
 
 
 if __name__ == "__main__":

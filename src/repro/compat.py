@@ -1,0 +1,54 @@
+"""Version-compat shims for the pinned jax (0.4.37).
+
+Two API gaps bite on the pinned environment:
+
+- ``jax.sharding.AxisType`` (and ``jax.make_mesh(..., axis_types=...)``)
+  only exist from jax 0.5; meshes on 0.4.x take no axis types.
+- top-level ``jax.shard_map`` (with the ``check_vma`` kwarg) replaced
+  ``jax.experimental.shard_map.shard_map`` (``check_rep``) in 0.6.
+
+Everything that builds meshes or shard_maps goes through here so the rest
+of the tree is version-oblivious.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _AXIS_TYPE is None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         axis_types=(_AXIS_TYPE.Auto,) * len(axis_names))
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict: 0.4.x returns a
+    one-element list of per-computation dicts, newer jax the dict itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Per-shard mapping across jax versions.
+
+    ``check`` maps onto ``check_vma`` (new API) / ``check_rep`` (old API);
+    callers in this repo always disable it (collectives are hand-checked).
+    """
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    import inspect
+    params = inspect.signature(sm).parameters
+    kw = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: check})

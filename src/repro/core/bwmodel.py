@@ -146,6 +146,25 @@ def optimal_weights(bw_profiled: np.ndarray) -> np.ndarray:
     return m / total
 
 
+def stall_cost(bytes_per_domain: np.ndarray,
+               bandwidths_gbps: np.ndarray) -> float:
+    """Eq. 1's max-parallel-transfer time for one access batch.
+
+    ``bytes_per_domain[d]`` bytes stream from domain ``d`` at
+    ``bandwidths_gbps[d]`` GB/s; transfers from distinct domains overlap, so
+    the stall is the slowest domain's transfer. This single scalar is what
+    the serving stack scores with: the engine's per-step KV read time, the
+    swap manager's transfer estimates, and the scheduler's victim selection
+    all call it with different byte vectors.
+    """
+    b = np.asarray(bytes_per_domain, dtype=np.float64)
+    bw = np.asarray(bandwidths_gbps, dtype=np.float64)
+    assert b.shape == bw.shape and (bw > 0).all()
+    if b.sum() <= 0:
+        return 0.0
+    return float((b / (bw * 1e9)).max())
+
+
 def transfer_time(
     shared_gb: float,
     weights: np.ndarray,

@@ -68,7 +68,8 @@ def frag_arg_sharding(cfg: ModelConfig, mesh, arg, kind):
 
 
 def _collect(compiled, chips_per_pod=analyze.CHIPS_PER_POD):
-    ca = compiled.cost_analysis() or {}
+    from repro import compat
+    ca = compat.cost_analysis(compiled)
     txt = compiled.as_text()
     colls = analyze.parse_collectives(txt, chips_per_pod)
     return {

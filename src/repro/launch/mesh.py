@@ -3,7 +3,7 @@ built by functions only (the dry-run sets XLA_FLAGS before first jax init)."""
 
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -11,15 +11,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) = (pod, data, model) — 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_debug_mesh(devices: int = 8, model: int = 2):
     """Small mesh for CPU integration tests (requires the host-device flag)."""
-    return jax.make_mesh(
-        (devices // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((devices // model, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

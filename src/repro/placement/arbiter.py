@@ -121,8 +121,28 @@ class DomainArbiter:
         self.tenants[name] = tenant
         return tenant
 
+    #: tenant priority -> scheduler class level (HIGH preempts best-effort)
+    PRIORITY_LEVELS = {Priority.HIGH: 10, Priority.BEST_EFFORT: 0}
+
     def attach_engine(self, name: str, engine) -> None:
-        self.tenants[name].engine = engine
+        """Wire a tenant's serving engine in. When the engine runs a request
+        scheduler, the tenant is registered as a priority class at the level
+        of its arbiter priority and becomes the engine's default class — so
+        multi-tenant co-scheduling (capacity + DWP) and per-tenant
+        preemption (batch slots + KV swap) compose end-to-end."""
+        t = self.tenants[name]
+        t.engine = engine
+        sched = getattr(engine, "scheduler", None)
+        if sched is not None:
+            from repro.scheduler.scheduler import PriorityClass
+            from repro.scheduler.slo import SloSpec
+            existing = sched.classes.get(name)
+            sched.ensure_class(PriorityClass(
+                name=name, level=self.PRIORITY_LEVELS[t.priority],
+                # arbiter owns the level; SLO deadlines stay whatever the
+                # operator configured on the scheduler (if anything)
+                slo=existing.slo if existing is not None else SloSpec()))
+            sched.default_class = name
 
     def unregister(self, name: str) -> dict[str, np.ndarray]:
         """Release a tenant's capacity and grow the remaining tenants' pools

@@ -46,6 +46,43 @@ class Ring:
         return self._count
 
 
+class ClassSloCounters:
+    """Per-priority-class SLO accounting (scheduler subsystem, DESIGN.md §5).
+
+    One row per class: request lifecycle counts, deadline hits/misses, token
+    throughput, and swap traffic attributed to the class. The scheduler's
+    :class:`repro.scheduler.slo.SloTracker` drives these; they surface in the
+    owning pool's ``DomainTelemetry.snapshot()`` so engine telemetry carries
+    SLO state alongside placement state.
+    """
+
+    FIELDS = ("submitted", "completed", "preemptions", "ttft_met",
+              "ttft_missed", "tpot_met", "tpot_missed", "goodput_tokens",
+              "swap_out_pages", "swap_in_pages")
+
+    def __init__(self):
+        self._rows: dict[str, dict[str, int]] = {}
+
+    def _row(self, cls: str) -> dict[str, int]:
+        if cls not in self._rows:
+            self._rows[cls] = {f: 0 for f in self.FIELDS}
+        return self._rows[cls]
+
+    def add(self, cls: str, field: str, n: int = 1) -> None:
+        assert field in self.FIELDS, field
+        self._row(cls)[field] += n
+
+    def get(self, cls: str, field: str) -> int:
+        return self._row(cls)[field]
+
+    @property
+    def classes(self) -> list[str]:
+        return sorted(self._rows)
+
+    def snapshot(self) -> dict:
+        return {cls: dict(row) for cls, row in sorted(self._rows.items())}
+
+
 class DomainTelemetry:
     """Placement event counters for one pool's memory domains.
 
@@ -53,7 +90,8 @@ class DomainTelemetry:
     analytic stall-time samples (the Eq.-1 per-domain read time the engine
     computes each step). Global: a latency ring and planned-vs-executed
     migration counts (the tuner plans logical moves at cycle resolution; the
-    executor reports physically moved pages).
+    executor reports physically moved pages). When a scheduler rides on the
+    pool it attaches :class:`ClassSloCounters` (``slo``) and swap totals.
     """
 
     def __init__(self, domain_names: Sequence[str], ring_capacity: int = 128):
@@ -70,6 +108,10 @@ class DomainTelemetry:
         self.planned_moves = 0
         self.executed_moves = 0
         self.rebalances = 0
+        self.swap_outs = 0           # preemption swap round-trips (pages)
+        self.swap_ins = 0
+        self.swap_seconds = 0.0      # Eq.-1 transfer time spent swapping
+        self.slo: ClassSloCounters | None = None
 
     # -- event hooks --------------------------------------------------------
 
@@ -99,6 +141,21 @@ class DomainTelemetry:
     def record_rebalance(self) -> None:
         self.rebalances += 1
 
+    def record_swap(self, direction: str, pages: int,
+                    seconds: float) -> None:
+        assert direction in ("out", "in")
+        if direction == "out":
+            self.swap_outs += pages
+        else:
+            self.swap_ins += pages
+        self.swap_seconds += float(seconds)
+
+    def attach_slo(self) -> ClassSloCounters:
+        """Create (or return) the per-class SLO counter block."""
+        if self.slo is None:
+            self.slo = ClassSloCounters()
+        return self.slo
+
     # -- reporting ----------------------------------------------------------
 
     @property
@@ -117,7 +174,7 @@ class DomainTelemetry:
                 "bytes_out": int(self.bytes_out[i]),
                 "stall_mean_s": self.stall[i].mean(),
             }
-        return {
+        out = {
             "domains": domains,
             "latency_mean_s": self.latency.mean(),
             "latency_last_s": self.latency.last(),
@@ -125,4 +182,10 @@ class DomainTelemetry:
             "executed_moves": self.executed_moves,
             "bytes_moved": self.bytes_moved,
             "rebalances": self.rebalances,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "swap_seconds": self.swap_seconds,
         }
+        if self.slo is not None:
+            out["slo"] = self.slo.snapshot()
+        return out

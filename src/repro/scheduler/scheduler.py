@@ -1,0 +1,404 @@
+"""Request scheduler: priority continuous batching with KV swap preemption.
+
+The scheduler owns the request lifecycle the serving engine used to hand-roll:
+
+- **Admission** — a priority-class queue (higher ``level`` preempts lower;
+  FIFO within a class) with a *chunked-prefill token budget*: at most
+  ``prefill_token_budget`` new prompt tokens materialize K/V per step, so a
+  long prompt prefills across steps instead of stalling the decode batch.
+- **Continuous batching** — finished sequences leave the batch immediately;
+  waiting/swapped requests fill the slot the same step.
+- **Preemption** — when fast capacity runs short or a higher class arrives,
+  a victim's KV pages swap out to BWAP-weighted slow domains through the
+  placement executor (``swap.KVSwapManager``) and back on resume. Victims
+  maximize ``priority-factor x page-footprint x Eq.-1 stall cost``
+  (DESIGN.md §5): prefer low classes, large footprints, and sequences whose
+  pages already stall the batch.
+
+State machine (per request)::
+
+    QUEUED -> PREFILL -> RUNNING -> FINISHED
+                 ^          |
+                 |          v
+                 +------ SWAPPED       (swap-out <-> swap-in)
+
+Time is a virtual clock: the engine advances it by measured wall time plus
+the Eq.-1 analytic components (KV read stall, swap transfers), which is what
+SLO accounting (slo.py) and trace replay (workload.py) run on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Sequence
+
+from repro.core import bwmodel
+from repro.scheduler.slo import SloSpec, SloTracker
+from repro.scheduler.swap import KVSwapManager
+
+
+@dataclasses.dataclass(frozen=True)
+class PriorityClass:
+    """An admission class: scheduling level + SLO deadlines."""
+
+    name: str
+    level: int = 0                       # higher preempts lower
+    slo: SloSpec = dataclasses.field(default_factory=SloSpec)
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    RUNNING = "running"
+    SWAPPED = "swapped"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One sequence; the engine's ``Sequence_`` fields are preserved
+    (``sid``/``tokens``/``pages``/``prompt_len``/``length``/``done``)."""
+
+    sid: int
+    tokens: list
+    pages: list
+    prompt_len: int = 0
+    length: int = 0                      # tokens with K/V in the pool
+    done: bool = False
+    cls: str = "default"
+    max_new: int = 32
+    arrival_s: float = 0.0
+    state: State = State.QUEUED
+
+    @property
+    def produced(self) -> int:
+        return len(self.tokens) - self.prompt_len
+
+    @property
+    def prefill_target(self) -> int:
+        """Prompt tokens that prefill materializes: all but the last (the
+        first decode step writes that one at its true position)."""
+        return self.prompt_len - 1
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """What one engine step executes, in order: prefill chunks, then decode
+    over ``batch``. Swaps already happened inside ``schedule()``."""
+
+    prefill_chunks: list                 # (Request, lo, hi) token ranges
+    batch: list                          # Requests to decode this step
+    swapped_in: list
+    swapped_out: list
+    swap_seconds: float = 0.0
+
+
+class RequestScheduler:
+    """Priority continuous batching over one ``BwapPagePool``.
+
+    ``swap=None`` disables preemption (the pre-scheduler engine behavior):
+    capacity shortfalls make requests wait, and a batch that can no longer
+    grow raises ``RuntimeError`` exactly like the bare allocator did.
+    """
+
+    def __init__(self, pool, *, max_batch: int = 8,
+                 prefill_token_budget: int = 256,
+                 classes: Sequence[PriorityClass] | None = None,
+                 default_class: str = "default",
+                 default_max_new: int = 32,
+                 swap: KVSwapManager | None = None):
+        assert prefill_token_budget >= 1
+        self.pool = pool
+        self.max_batch = max_batch
+        self.prefill_token_budget = prefill_token_budget
+        self.swap = swap
+        self.classes: dict[str, PriorityClass] = {}
+        for pc in (classes or []):
+            self.classes[pc.name] = pc
+        if default_class not in self.classes:
+            self.classes[default_class] = PriorityClass(default_class)
+        self.default_class = default_class
+        self.default_max_new = default_max_new
+        self.slo = SloTracker(
+            {n: pc.slo for n, pc in self.classes.items()},
+            counters=pool.telemetry.attach_slo())
+        self._ids = itertools.count()
+        self.queued: list[Request] = []
+        self.prefilling: list[Request] = []
+        self.running: list[Request] = []
+        self.swapped: list[Request] = []
+        self.finished: list[Request] = []
+        self.now = 0.0
+        self._plan: StepPlan | None = None
+
+    # -- class registry ------------------------------------------------------
+
+    def ensure_class(self, pc: PriorityClass) -> None:
+        """Register (or update) a priority class — the arbiter routes each
+        tenant through this so tenant priority == scheduling priority."""
+        self.classes[pc.name] = pc
+        self.slo.specs[pc.name] = pc.slo
+
+    def level(self, r: Request) -> int:
+        return self.classes[r.cls].level
+
+    # -- admission -----------------------------------------------------------
+
+    def allocatable_pages(self) -> int:
+        """Pages a single sequence could ever hold at once: the pool minus
+        the swap reservation (reserved slots are for *parked* copies)."""
+        reserved = self.swap.reserved_total if self.swap is not None else 0
+        return self.pool.total_pages - reserved
+
+    def submit(self, prompt: Sequence[int], *, cls: str | None = None,
+               max_new: int | None = None,
+               arrival_s: float | None = None) -> int:
+        cls = cls if cls is not None else self.default_class
+        assert cls in self.classes, f"unknown priority class {cls!r}"
+        r = Request(sid=next(self._ids), tokens=list(prompt), pages=[],
+                    prompt_len=len(prompt), cls=cls,
+                    max_new=(max_new if max_new is not None
+                             else self.default_max_new),
+                    arrival_s=arrival_s if arrival_s is not None
+                    else self.now)
+        # reject infeasible requests here — admitting one would let it
+        # accumulate pages chunk by chunk until it wedges the whole engine
+        footprint = -(-(r.prefill_target + r.max_new) // self.pool.page_size)
+        if footprint > self.allocatable_pages():
+            raise ValueError(
+                f"request needs {footprint} KV pages but at most "
+                f"{self.allocatable_pages()} are ever allocatable "
+                "(pool minus swap reservation)")
+        self.queued.append(r)
+        self.slo.on_submit(r.sid, r.cls, r.arrival_s)
+        return r.sid
+
+    @property
+    def pending(self) -> list[Request]:
+        """Everything submitted but not finished and not in the batch."""
+        return self.queued + self.prefilling + self.swapped
+
+    # -- the per-step decision ------------------------------------------------
+
+    def schedule(self) -> StepPlan:
+        plan = StepPlan([], [], [], [], 0.0)
+        self._plan = plan
+        if not (self.running or self.prefilling or self.swapped
+                or self._arrived()):
+            nxt = min((r.arrival_s for r in self.queued), default=None)
+            if nxt is not None and nxt > self.now:
+                self.now = nxt           # idle: jump to the next arrival
+        self._priority_preempt()
+        self._swap_ins(plan)
+        self._plan_prefills(plan)
+        self._ensure_growth()
+        plan.batch = list(self.running)
+        self._plan = None
+        if (not plan.batch and not plan.prefill_chunks
+                and not plan.swapped_in and not plan.swapped_out
+                and self.pending):
+            future = [r.arrival_s for r in self.queued
+                      if r.arrival_s > self.now]
+            if future:
+                # blocked but more requests are due: jump to them (they can
+                # only be scheduled, never free capacity, so if nothing is
+                # admissible once all have arrived we raise below)
+                self.now = min(future)
+            else:
+                # no step will ever change this state — fail like the bare
+                # allocator did instead of spinning
+                raise RuntimeError(
+                    "KV pool exhausted: pending requests but no admissible "
+                    "work (pool too small or swap slots depleted)")
+        return plan
+
+    def _arrived(self) -> list[Request]:
+        out = [r for r in self.queued if r.arrival_s <= self.now]
+        out.sort(key=self._order)
+        return out
+
+    def _order(self, r: Request):
+        return (-self.level(r), r.arrival_s, r.sid)
+
+    def _slots_used(self) -> int:
+        return len(self.running) + len(self.prefilling)
+
+    def _growth_need(self, seqs) -> int:
+        """Decode pages the next step will allocate for ``seqs``."""
+        ps = self.pool.page_size
+        return sum(1 for r in seqs if r.length % ps == 0)
+
+    # -- preemption -----------------------------------------------------------
+
+    def victim_score(self, r: Request) -> float:
+        """priority-factor x footprint x Eq.-1 stall cost (DESIGN.md §5):
+        ``2^-level`` halves a victim's attractiveness per priority level;
+        footprint is what the eviction frees; the stall term prefers
+        sequences whose pages already gate the batch's read time."""
+        stall = bwmodel.stall_cost(self.pool.bytes_per_domain(r.pages),
+                                   self.pool.bw)
+        return (2.0 ** -self.level(r)) * len(r.pages) * (stall + 1e-12)
+
+    def _swap_out(self, r: Request) -> None:
+        pages = len(r.pages)
+        r.pages, secs = self.swap.swap_out(r.pages)
+        self.running.remove(r)
+        r.state = State.SWAPPED
+        self.swapped.append(r)
+        self.slo.on_preempt(r.sid, pages)
+        if self._plan is not None:
+            self._plan.swapped_out.append(r)
+            self._plan.swap_seconds += secs
+
+    def _reclaim(self, need: int, max_level: int | None = None) -> bool:
+        """Swap out victims until ``need`` pages are allocatable. Never
+        touches classes above ``max_level`` (capacity pressure from a low
+        class must not evict a high one)."""
+        while self.pool.free_count() < need:
+            if self.swap is None:
+                return False
+            protect = self._plan.swapped_in if self._plan is not None else []
+            victims = [r for r in self.running if r.pages
+                       and r not in protect   # no same-step in->out churn
+                       and (max_level is None or self.level(r) <= max_level)
+                       and self.swap.can_swap_out(len(r.pages))]
+            if not victims:
+                return False
+            self._swap_out(max(victims, key=self.victim_score))
+        return True
+
+    def _priority_preempt(self) -> None:
+        """Make a batch slot for the best waiting request by evicting a
+        strictly lower class (victim choice by ``victim_score``)."""
+        if self.swap is None:
+            return
+        cands = sorted(self._arrived() + self.swapped, key=self._order)
+        if not cands or self._slots_used() < self.max_batch:
+            return
+        cand = cands[0]
+        lower = [r for r in self.running if self.level(r) < self.level(cand)
+                 and r.pages and self.swap.can_swap_out(len(r.pages))]
+        if lower:
+            self._swap_out(max(lower, key=self.victim_score))
+
+    # -- resume ---------------------------------------------------------------
+
+    def _swap_ins(self, plan: StepPlan) -> None:
+        ps = self.pool.page_size
+        for r in sorted(self.swapped, key=self._order):
+            if r in plan.swapped_out:    # no same-step thrash
+                continue
+            if self._slots_used() >= self.max_batch:
+                break
+            need = (len(r.pages) + (1 if r.length % ps == 0 else 0)
+                    + self._growth_need(self.running))
+            if self.pool.free_count() < need:
+                continue
+            r.pages, secs = self.swap.swap_in(r.pages)
+            self.swapped.remove(r)
+            r.state = State.RUNNING
+            self.running.append(r)
+            self.slo.on_resume(r.sid, len(r.pages))
+            plan.swapped_in.append(r)
+            plan.swap_seconds += secs
+
+    # -- chunked prefill ------------------------------------------------------
+
+    def _plan_prefills(self, plan: StepPlan) -> None:
+        ps = self.pool.page_size
+        budget = self.prefill_token_budget
+        in_flight = sorted(self.prefilling, key=self._order)
+        fresh = self._arrived()
+        for r in in_flight + fresh:
+            if budget <= 0:
+                break
+            if r.state is State.QUEUED \
+                    and self._slots_used() >= self.max_batch:
+                continue                 # a lower class may still fit later
+            target = r.prefill_target
+            chunk = min(budget, target - r.length)
+            hi = r.length + chunk
+            new_pages = -(-hi // ps) - len(r.pages)
+            # reserve the first decode page too when this chunk completes
+            # the prefill on a page boundary, so the sequence can decode
+            done_now = hi == target
+            need = (new_pages + self._growth_need(self.running)
+                    + (1 if done_now and target % ps == 0 else 0))
+            if self.pool.free_count() < need and \
+                    not self._reclaim(need, max_level=self.level(r)):
+                continue
+            r.pages.extend(self.pool.alloc_page() for _ in range(new_pages))
+            if chunk > 0:
+                plan.prefill_chunks.append((r, r.length, hi))
+                budget -= chunk
+                # advance now so growth accounting sees the post-chunk
+                # length; the engine writes K/V from the plan's (lo, hi)
+                r.length = hi
+            if r.state is State.QUEUED:
+                self.queued.remove(r)
+                if done_now:
+                    r.state = State.RUNNING
+                    self.running.append(r)
+                else:
+                    r.state = State.PREFILL
+                    self.prefilling.append(r)
+            elif done_now:
+                self.prefilling.remove(r)
+                r.state = State.RUNNING
+                self.running.append(r)
+
+    def _ensure_growth(self) -> None:
+        """The decode batch must be able to allocate its next pages; evict
+        (any class — an undecodable batch serves nobody) or fail loudly."""
+        while self.pool.free_count() < self._growth_need(self.running):
+            victims = [r for r in self.running if r.pages
+                       and self.swap is not None
+                       and self.swap.can_swap_out(len(r.pages))]
+            if not victims:
+                raise RuntimeError("KV pool exhausted: decode batch cannot "
+                                   "grow and no victim is swappable")
+            self._swap_out(max(victims, key=self.victim_score))
+
+    # -- completion + clock (driven by the engine) ----------------------------
+
+    def advance(self, seconds: float) -> None:
+        self.now += float(seconds)
+
+    def notice_first_token(self, r: Request) -> None:
+        self.slo.on_first_token(r.sid, self.now)
+
+    def finish(self, r: Request) -> None:
+        r.done = True
+        r.state = State.FINISHED
+        self.pool.free_pages(r.pages)
+        r.pages = []
+        self.running.remove(r)
+        self.finished.append(r)
+        self.slo.on_finish(r.sid, self.now, r.produced)
+
+    # -- arbiter rebalance ----------------------------------------------------
+
+    def remap(self, id_map) -> None:
+        for r in self.prefilling + self.running + self.swapped:
+            r.pages = [int(id_map[p]) for p in r.pages]
+            assert all(p >= 0 for p in r.pages), \
+                "live page lost in rebalance"
+        if self.swap is not None:
+            self.swap.remap(id_map)
+
+    # -- reporting ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "now_s": self.now,
+            "queued": len(self.queued),
+            "prefilling": len(self.prefilling),
+            "running": len(self.running),
+            "swapped": len(self.swapped),
+            "finished": len(self.finished),
+            "swap_slots_free": (self.swap.slots_free()
+                                if self.swap else 0),
+            "slo": self.slo.summary(self.now),
+        }

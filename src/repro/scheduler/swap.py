@@ -1,0 +1,152 @@
+"""KV swap manager: park preempted sequences' pages in slow domains.
+
+The paper's Observation 1 — slow domains are wasted capacity unless placement
+uses them — applies twice in serving. Live decode pages spread per BWAP
+weights (kvcache), and *cold* pages (sequences preempted by the scheduler)
+should not occupy fast-HBM capacity at all: they park in reserved slots
+carved out of the slow domains, freeing fast pages for the running batch.
+That is what lets total live KV exceed ``hbm_local`` capacity.
+
+Mechanics: at construction the manager reserves a fraction of every
+non-worker domain's pages (``BwapPagePool.reserve_pages`` — the slots leave
+the free lists, so the allocator never hands them to live sequences). A
+swap-out distributes a victim's pages over the slow domains through a policy
+from the placement registry — ``bwap_canonical`` (weights ∝ slow-domain
+bandwidth) by default, ``uniform`` / ``local_first`` as the baselines
+``benchmarks/scheduler_bench.py`` compares — and executes the copies as one
+batched gather/scatter per pool array (placement.executor). Swap-in
+allocates destinations through ``pool.alloc_page`` (live-placement policy)
+and returns the vacated slots to the reservation.
+
+Transfer cost is the Eq.-1 max-parallel-transfer time
+(``core.bwmodel.stall_cost``) of the slower side of the copy; the engine
+folds it into the step latency, which is how swap-placement quality reaches
+goodput.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bwmodel
+from repro.placement import policy as placement_policy
+
+
+class KVSwapManager:
+    """Swap-slot reservation + bandwidth-aware swap placement for one pool."""
+
+    def __init__(self, pool, *, placement: str = "bwap_canonical",
+                 reserve_fraction: float = 0.5,
+                 reserve_pages: dict[str, int] | None = None):
+        """``reserve_fraction`` of every slow (non-worker) domain's currently
+        free pages is reserved, unless ``reserve_pages`` gives explicit
+        per-domain counts (by domain name; missing names reserve zero)."""
+        self.pool = pool
+        self.placement = placement_policy.resolve(placement)
+        self.slow = list(pool.slow_domains)
+        assert self.slow, "swap needs at least one non-worker domain"
+        self.slots: dict[int, list[int]] = {}
+        for d in self.slow:
+            if reserve_pages is not None:
+                n = int(reserve_pages.get(pool.domains[d].name, 0))
+            else:
+                n = int(len(pool.free[d]) * reserve_fraction)
+            self.slots[d] = pool.reserve_pages(d, n)
+        self.reserved_total = sum(len(s) for s in self.slots.values())
+
+    # -- capacity ------------------------------------------------------------
+
+    def slots_free(self) -> int:
+        return sum(len(s) for s in self.slots.values())
+
+    def can_swap_out(self, num_pages: int) -> bool:
+        return self.slots_free() >= num_pages
+
+    # -- placement over the slow-domain subspace ------------------------------
+
+    def _slot_counts(self, num_pages: int) -> np.ndarray:
+        """How many of ``num_pages`` go to each slow domain (policy-weighted,
+        clamped to available slots)."""
+        ctx = placement_policy.PlacementContext(
+            bandwidths=np.asarray([self.pool.domains[d].read_bw
+                                   for d in self.slow]),
+            num_pages=num_pages,
+            capacities=np.asarray([len(self.slots[d]) for d in self.slow]))
+        return self.placement.counts(ctx)
+
+    # -- the round-trip -------------------------------------------------------
+
+    def swap_out(self, page_ids: list[int]) -> tuple[list[int], float]:
+        """Move a sequence's pages into reserved slow-domain slots; frees the
+        sources back to the pool. Returns ``(new_page_ids, seconds)`` with
+        page order preserved (the page table stays positional)."""
+        n = len(page_ids)
+        if n == 0:
+            return [], 0.0
+        assert self.can_swap_out(n), "not enough reserved swap slots"
+        counts = self._slot_counts(n)
+        dst: list[int] = []
+        for d, c in zip(self.slow, counts):
+            dst.extend(self.slots[d].pop() for _ in range(int(c)))
+        src_doms = [self.pool.domain_of(p) for p in page_ids]
+        dst_doms = [self.pool.domain_of(p) for p in dst]
+        (self.pool.k_pool, self.pool.v_pool), _ = self.pool.executor.execute(
+            (self.pool.k_pool, self.pool.v_pool), page_ids, dst,
+            src_domains=src_doms, dst_domains=dst_doms)
+        self.pool.free_pages(page_ids)
+        seconds = self._transfer_seconds(src_doms, dst_doms)
+        self.pool.telemetry.record_swap("out", n, seconds)
+        return dst, seconds
+
+    def swap_in(self, page_ids: list[int]) -> tuple[list[int], float]:
+        """Bring parked pages back through the pool's live placement policy;
+        vacated slots rejoin the reservation. Caller guarantees the pool has
+        ``len(page_ids)`` allocatable pages (the scheduler checks)."""
+        n = len(page_ids)
+        if n == 0:
+            return [], 0.0
+        dst = [self.pool.alloc_page() for _ in range(n)]
+        src_doms = [self.pool.domain_of(p) for p in page_ids]
+        dst_doms = [self.pool.domain_of(p) for p in dst]
+        (self.pool.k_pool, self.pool.v_pool), _ = self.pool.executor.execute(
+            (self.pool.k_pool, self.pool.v_pool), page_ids, dst,
+            src_domains=src_doms, dst_domains=dst_doms)
+        for pid in page_ids:
+            self.slots[self.pool.domain_of(pid)].append(int(pid))
+        seconds = self._transfer_seconds(src_doms, dst_doms)
+        self.pool.telemetry.record_swap("in", n, seconds)
+        return dst, seconds
+
+    def _transfer_seconds(self, src_doms, dst_doms) -> float:
+        """Eq.-1 cost of the copy: reads and writes overlap across domains,
+        so the transfer takes the slower of the two sides."""
+        nd = len(self.pool.domains)
+        read = np.bincount(src_doms, minlength=nd) * self.pool.page_bytes
+        write = np.bincount(dst_doms, minlength=nd) * self.pool.page_bytes
+        return max(bwmodel.stall_cost(read, self.pool.bw),
+                   bwmodel.stall_cost(write, self.pool.bw))
+
+    # -- arbiter rebalance ----------------------------------------------------
+
+    def remap(self, id_map: np.ndarray) -> None:
+        """Rewrite reserved slot ids after the pool was rebuilt (slots are
+        live pages from the pool's perspective, so the id map covers them)."""
+        for d in list(self.slots):
+            self.slots[d] = [int(id_map[p]) for p in self.slots[d]]
+            assert all(p >= 0 for p in self.slots[d]), \
+                "reserved swap slot lost in rebalance"
+        # domain indices are stable across rebalance (sizes change, order
+        # does not), but a shrinking rebalance may spill a slot into
+        # another domain — re-key, and hand slots that landed in *worker*
+        # domains back to the allocator (fast pages must not sit idle in a
+        # parking reservation, and _slot_counts only spans slow domains).
+        rekey: dict[int, list[int]] = {d: [] for d in self.slow}
+        for pages in self.slots.values():
+            for p in pages:
+                d = self.pool.domain_of(p)
+                if d in rekey:
+                    rekey[d].append(p)
+                else:
+                    self.pool.free[d].append(p)
+                    self.reserved_total -= 1
+        self.slots = rekey

@@ -1,6 +1,8 @@
 """Batched serving engine over the BWAP page pool (dense GQA archs).
 
-CPU-runnable end-to-end: continuous batching, paged prefill + decode through
+CPU-runnable end-to-end: priority continuous batching through the request
+scheduler (admission, chunked prefill, preemption with KV swap to slow
+domains — ``repro.scheduler``), paged prefill + decode through
 kernels/paged_attention (reference impl on CPU, Pallas on TPU), BWAP
 placement of fresh pages, and online DWP tuning fed by measured step
 latencies. examples/serve_paged.py drives it.
@@ -8,8 +10,6 @@ latencies. examples/serve_paged.py drives it.
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
 import time
 from typing import Sequence
 
@@ -21,21 +21,12 @@ from repro.kernels.paged_attention import ops as paged_ops
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 from repro.models.lm import LM
+from repro.scheduler.scheduler import Request, RequestScheduler
 from repro.serve.kvcache import BwapPagePool
 
-
-@dataclasses.dataclass
-class Sequence_:
-    sid: int
-    tokens: list
-    pages: list            # page ids, in order
-    prompt_len: int = 0
-    length: int = 0        # tokens with K/V materialized in the pool
-    done: bool = False
-
-    @property
-    def produced(self) -> int:
-        return len(self.tokens) - self.prompt_len
+# The per-sequence record moved into the scheduler subsystem; the old name
+# stays importable (tests, examples).
+Sequence_ = Request
 
 
 class PagedDecoder:
@@ -101,35 +92,64 @@ class PagedDecoder:
 
 
 class ServeEngine:
+    """Model execution over the pool; the request lifecycle — admission,
+    batch composition, chunked prefill pacing, preemption — is owned by the
+    :class:`RequestScheduler` (pass one in to configure priority classes and
+    KV swap; the default scheduler reproduces plain continuous batching)."""
+
     def __init__(self, cfg: ModelConfig, params, pool: BwapPagePool,
-                 max_batch: int = 8, max_new: int = 32, seed: int = 0):
+                 max_batch: int = 8, max_new: int = 32, seed: int = 0,
+                 scheduler: RequestScheduler | None = None,
+                 wall_clock: bool = True, sim_step_s: float = 0.0):
         self.cfg = cfg
         self.pool = pool
         self.model = LM(cfg)
         self.decoder = PagedDecoder(cfg, params, pool)
         self.params = params
-        self.max_batch = max_batch
-        self.max_new = max_new
-        self._ids = itertools.count()
-        self.waiting: list[Sequence_] = []
-        self.active: list[Sequence_] = []
-        self.finished: list[Sequence_] = []
+        self.scheduler = scheduler if scheduler is not None else \
+            RequestScheduler(pool, max_batch=max_batch,
+                             default_max_new=max_new)
+        # wall_clock=False runs the virtual clock on the Eq.-1 analytic
+        # terms only — deterministic SLO numbers for benchmarks/tests;
+        # sim_step_s then stands in for per-step compute time
+        self.wall_clock = wall_clock
+        self.sim_step_s = sim_step_s
         self.latencies: list[float] = []
 
-    def submit(self, prompt: Sequence[int]) -> int:
-        s = Sequence_(next(self._ids), list(prompt), [],
-                      prompt_len=len(prompt))
-        self.waiting.append(s)
-        return s.sid
+    # scheduler views under the pre-scheduler attribute names
+    @property
+    def active(self) -> list[Sequence_]:
+        return self.scheduler.running
 
-    # -- prefill: full forward, then scatter K/V into BWAP-placed pages -----
+    @property
+    def waiting(self) -> list[Sequence_]:
+        return self.scheduler.pending
 
-    def _prefill(self, seq: Sequence_):
-        cfg = self.cfg
+    @property
+    def finished(self) -> list[Sequence_]:
+        return self.scheduler.finished
+
+    def submit(self, prompt: Sequence[int], *, cls: str | None = None,
+               max_new: int | None = None,
+               arrival_s: float | None = None) -> int:
+        return self.scheduler.submit(prompt, cls=cls, max_new=max_new,
+                                     arrival_s=arrival_s)
+
+    # -- chunked prefill: forward over the prefix, scatter K/V for the chunk --
+
+    def _prefill_chunk(self, seq: Sequence_, lo: int, hi: int):
+        """Materialize K/V for prompt positions [lo, hi). Causal attention
+        makes position p's K/V depend only on tokens[:p+1], so recomputing
+        the prefix forward gives bit-identical results to one-shot prefill;
+        the scheduler's token budget bounds hi-lo (new KV per step), which
+        is the decode-interference term chunking exists to cap. The last
+        prompt token is never prefilled — the first decode step consumes it
+        and writes its K/V at the true position (double-writing it shifted
+        the decode RoPE position by one)."""
         ps = self.pool.page_size
-        toks = jnp.asarray([seq.tokens], jnp.int32)
+        toks = jnp.asarray([seq.tokens[:hi]], jnp.int32)
         x = self.model.embed(self.params, {"tokens": toks})
-        pos = jnp.arange(len(seq.tokens), dtype=jnp.int32)[None]
+        pos = jnp.arange(hi, dtype=jnp.int32)[None]
         _, _, caches = self.model.hidden(self.params, x, pos,
                                          want_cache=True)
         kv = caches[0]  # single dense group: {"k": [L,1,S,nkv,hd] or list}
@@ -138,76 +158,85 @@ class ServeEngine:
             v = jnp.stack([c["v"][0] for c in kv])
         else:
             k, v = kv["k"][:, 0], kv["v"][:, 0]
-        # Materialize K/V for all prompt tokens but the last: the first
-        # decode step consumes tokens[-1] and writes its K/V at position
-        # len-1 itself. (Writing it here too double-counted the last prompt
-        # token and shifted the decode RoPE position by one.)
-        n_filled = len(seq.tokens) - 1
-        n_pages = -(-n_filled // ps)
-        seq.pages = [self.pool.alloc_page() for _ in range(n_pages)]
-        for pi, pid in enumerate(seq.pages):
-            lo, hi = pi * ps, min((pi + 1) * ps, n_filled)
-            self.pool.k_pool = self.pool.k_pool.at[:, pid, :hi - lo].set(
-                k[:, lo:hi])
-            self.pool.v_pool = self.pool.v_pool.at[:, pid, :hi - lo].set(
-                v[:, lo:hi])
-        seq.length = n_filled
+        positions = np.arange(lo, hi)
+        pids = np.asarray([seq.pages[p // ps] for p in positions], np.int32)
+        slots = (positions % ps).astype(np.int32)
+        # one scatter per pool array for the whole chunk
+        self.pool.k_pool = self.pool.k_pool.at[:, pids, slots].set(k[:, lo:hi])
+        self.pool.v_pool = self.pool.v_pool.at[:, pids, slots].set(v[:, lo:hi])
+        seq.length = hi
 
     def step(self) -> dict:
-        while self.waiting and len(self.active) < self.max_batch:
-            s = self.waiting.pop(0)
-            self._prefill(s)
-            self.active.append(s)
-        if not self.active:
-            return {"active": 0}
         t0 = time.monotonic()
+        plan = self.scheduler.schedule()
+        for seq, lo, hi in plan.prefill_chunks:
+            self._prefill_chunk(seq, lo, hi)
+        batch = plan.batch
+        if not batch and not plan.prefill_chunks:
+            self.scheduler.advance(plan.swap_seconds)
+            return {"active": 0, "pending": len(self.scheduler.pending)}
         ps = self.pool.page_size
-        # grow pages where needed, then batch
-        for s in self.active:
-            if s.length % ps == 0:
-                s.pages.append(self.pool.alloc_page())
-        mp = max(len(s.pages) for s in self.active)
-        tables = np.zeros((len(self.active), mp), np.int32)
-        for i, s in enumerate(self.active):
-            tables[i, :len(s.pages)] = s.pages
-        lens = np.asarray([s.length for s in self.active], np.int32)
-        toks = np.asarray([[s.tokens[-1]] for s in self.active], np.int32)
-        logits = self.decoder.decode_step(
-            jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(lens),
-            jnp.asarray(lens))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for s, t in zip(self.active, nxt):
-            s.tokens.append(int(t))
-            s.length += 1          # the decoded token's K/V is now pooled
-            if s.produced >= self.max_new:
-                self._finish(s)
-        self.active = [s for s in self.active if not s.done]
+        done: list[Sequence_] = []
+        if batch:
+            # grow pages where needed (the scheduler reserved capacity)
+            for s in batch:
+                if s.length % ps == 0:
+                    s.pages.append(self.pool.alloc_page())
+            mp = max(len(s.pages) for s in batch)
+            tables = np.zeros((len(batch), mp), np.int32)
+            for i, s in enumerate(batch):
+                tables[i, :len(s.pages)] = s.pages
+            lens = np.asarray([s.length for s in batch], np.int32)
+            toks = np.asarray([[s.tokens[-1]] for s in batch], np.int32)
+            logits = self.decoder.decode_step(
+                jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(lens),
+                jnp.asarray(lens))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for s, t in zip(batch, nxt):
+                s.tokens.append(int(t))
+                s.length += 1      # the decoded token's K/V is now pooled
+                if s.produced >= s.max_new:
+                    done.append(s)
 
         wall = time.monotonic() - t0
-        # latency signal = wall clock + analytic BWAP read time (the CPU
-        # has no real memory-domain asymmetry; Eq.-1 model supplies it)
+        # latency signal = wall clock + analytic BWAP read time + swap
+        # transfer time (the CPU has no real memory-domain asymmetry;
+        # the Eq.-1 model supplies it); prefill-only steps read no KV, and
+        # sampling them would dilute the per-domain stall rings with zeros
         sim = max(self.pool.expected_read_time(
-            [p for s in self.active for p in s.pages]), 0.0)
-        self.latencies.append(wall + sim)
-        if self.pool.record_latency(wall + sim):
-            # the tuner moved the allocation cycle: re-home live sequences
-            # (batched gather/scatter through the migration executor)
-            for s in self.active:
-                s.pages = self.pool.migrate_sequence(s.pages)
-        return {"active": len(self.active), "latency": wall + sim,
+            [p for s in batch if s not in done for p in s.pages]), 0.0) \
+            if batch else 0.0
+        dt = ((wall if self.wall_clock else 0.0) + sim + plan.swap_seconds
+              + (self.sim_step_s if batch else 0.0))
+        self.scheduler.advance(dt)
+        for s in batch:
+            if s.produced == 1:
+                self.scheduler.notice_first_token(s)
+        for s in done:
+            self.scheduler.finish(s)
+        moved = False
+        if batch:
+            self.latencies.append(dt)
+            # the DWP tuner judges *placement*: feed it the step latency
+            # minus swap transfers — a preemption spike says nothing about
+            # where the live pages sit and would trigger spurious re-homing
+            if self.pool.record_latency(dt - plan.swap_seconds):
+                # the tuner moved the allocation cycle: re-home live
+                # sequences (batched gather/scatter through the executor)
+                for s in self.scheduler.running:
+                    s.pages = self.pool.migrate_sequence(s.pages)
+                moved = True
+        return {"active": len(self.scheduler.running),
+                "latency": dt, "migrated": moved,
                 "dwp": self.pool.tuner.dwp,
                 "occupancy": self.pool.occupancy(),
+                "swapped": len(self.scheduler.swapped),
+                "swapped_out": len(plan.swapped_out),
+                "swapped_in": len(plan.swapped_in),
                 "telemetry": self.pool.telemetry.snapshot()}
 
     def remap_pages(self, id_map: np.ndarray) -> None:
         """Rewrite page tables after the pool was rebalanced (arbiter
-        capacity change): old page id -> new page id."""
-        for s in self.active:
-            s.pages = [int(id_map[p]) for p in s.pages]
-            assert all(p >= 0 for p in s.pages), "live page lost in rebalance"
-
-    def _finish(self, s: Sequence_):
-        s.done = True
-        self.pool.free_pages(s.pages)
-        s.pages = []
-        self.finished.append(s)
+        capacity change): old page id -> new page id. Covers running,
+        prefilling, and swapped sequences plus the swap reservation."""
+        self.scheduler.remap(id_map)

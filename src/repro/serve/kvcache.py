@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import interleave
+from repro.core import bwmodel, interleave
 from repro.core.dwp import DWPConfig, DWPTuner
 from repro.models.config import ModelConfig
 from repro.placement import policy as placement_policy
@@ -155,6 +155,37 @@ class BwapPagePool:
             dom = self.domain_of(pid)
             self.free[dom].append(int(pid))
             self.telemetry.record_free(dom)
+
+    def reserve_pages(self, domain: int, n: int) -> list[int]:
+        """Take ``n`` free pages out of ``domain``'s free list without
+        counting them as allocations: the scheduler's swap manager holds
+        them as parking slots for preempted KV state, so ``alloc_page``
+        never hands them to live sequences."""
+        if n > len(self.free[domain]):
+            raise RuntimeError(
+                f"cannot reserve {n} pages in domain "
+                f"{self.domains[domain].name!r}: {len(self.free[domain])} "
+                "free")
+        taken = [self.free[domain].pop() for _ in range(n)]
+        return taken
+
+    def free_count(self) -> int:
+        """Pages currently allocatable (reserved swap slots excluded —
+        they are not on the free lists)."""
+        return sum(len(f) for f in self.free)
+
+    @property
+    def slow_domains(self) -> tuple[int, ...]:
+        """Non-worker domains — where preempted KV state parks."""
+        return tuple(i for i, d in enumerate(self.domains)
+                     if not d.is_worker)
+
+    def bytes_per_domain(self, page_ids: Sequence[int]) -> np.ndarray:
+        """Per-domain resident bytes of a page set (Eq.-1 input)."""
+        out = np.zeros(len(self.domains))
+        for pid in page_ids:
+            out[self.domain_of(pid)] += self.page_bytes
+        return out
 
     # -- data path ------------------------------------------------------------
 
@@ -295,13 +326,10 @@ class BwapPagePool:
 
     def expected_read_time(self, page_ids: Sequence[int]) -> float:
         """Analytic per-token KV read time for a sequence (the max-parallel-
-        transfer model of Eq. 1): bytes per domain / domain bw, max. Feeds
+        transfer model of Eq. 1, ``core.bwmodel.stall_cost``). Feeds
         per-domain stall samples into telemetry."""
-        per_domain = np.zeros(len(self.domains))
-        for pid in page_ids:   # page_bytes: K+V, all layers, actual dtype
-            per_domain[self.domain_of(pid)] += self.page_bytes
-        times = per_domain / (np.asarray(
-            [d.read_bw for d in self.domains]) * 1e9)
+        per_domain = self.bytes_per_domain(page_ids)
+        times = per_domain / (self.bw * 1e9)
         for d, t in enumerate(times):
             self.telemetry.record_stall(d, float(t))
-        return float(times.max()) if len(page_ids) else 0.0
+        return bwmodel.stall_cost(per_domain, self.bw)

@@ -95,8 +95,9 @@ def weighted_allgather(x_pages, owner: np.ndarray, mesh, axis: str = "data"):
     proportional to the pages actually owned, so weighted tables shift
     traffic exactly as the placement dictates.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     owner_dev = jnp.asarray(owner, jnp.int32)
 
@@ -106,4 +107,4 @@ def weighted_allgather(x_pages, owner: np.ndarray, mesh, axis: str = "data"):
         return jax.lax.psum(xp * mine, axis)
 
     return shard_map(body, mesh=mesh, in_specs=P(None, None),
-                     out_specs=P(None, None), check_vma=False)(x_pages)
+                     out_specs=P(None, None))(x_pages)

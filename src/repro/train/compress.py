@@ -13,8 +13,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def _blockwise_q8(x, block: int = 256):
@@ -57,8 +58,7 @@ def compressed_psum_grads(grads, residuals, mesh, axis: str = "data",
 
         return shard_map(
             body, mesh=mesh,
-            in_specs=(P(), P()), out_specs=(P(), P()),
-            check_vma=False)(g, r)
+            in_specs=(P(), P()), out_specs=(P(), P()))(g, r)
 
     flat_g, tree = jax.tree_util.tree_flatten(grads)
     flat_r = jax.tree_util.tree_leaves(residuals)
