@@ -122,6 +122,9 @@ def main() -> None:
     scheduler_bench.compare(requests=8, max_new=12, seed=args.seed,
                             check=False)
 
+    _hdr("Prefix sharing — peak KV footprint, reuse on vs off")
+    scheduler_bench.prefix_compare(seed=args.seed, check=False)
+
     if not args.skip_dryrun_table:
         _hdr("Dry-run + roofline aggregation")
         from benchmarks import roofline_table

@@ -32,6 +32,8 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--kind", default="bursty",
                     choices=["poisson", "bursty", "heavy_tail"])
+    ap.add_argument("--prefix-len", type=int, default=16,
+                    help="shared system-prompt length (0 disables)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -68,10 +70,16 @@ def main():
         kind=args.kind, num_requests=args.requests,
         mean_interarrival_s=0.01, prompt_mean=14, prompt_max=40,
         max_new=args.new, vocab_size=cfg.vocab_size,
-        class_mix=(("interactive", 0.3), ("batch", 0.7)), seed=args.seed))
+        class_mix=(("interactive", 0.3), ("batch", 0.7)), seed=args.seed,
+        prefix_len=args.prefix_len, prefix_groups=2, prefix_frac=0.7))
+    # total_kv_pages counts *logical* pages (every request's full view);
+    # with prefix reuse the trie maps identical prompt prefixes onto the
+    # same physical pages, so the physical oversubscription is lower —
+    # track the peak physical footprint and report both
     footprint = total_kv_pages(trace, pool.page_size)
-    print(f"workload: {len(trace)} requests ({args.kind}), KV footprint "
-          f"{footprint} pages vs hbm_local {domains[0].num_pages} "
+    print(f"workload: {len(trace)} requests ({args.kind}), logical KV "
+          f"footprint {footprint} pages vs hbm_local "
+          f"{domains[0].num_pages} "
           f"(oversubscription x{footprint / domains[0].num_pages:.1f}); "
           f"unreserved pool {pool.free_count()}, swap slots "
           f"{swap.reserved_total}")
@@ -80,25 +88,39 @@ def main():
                    arrival_s=t.arrival_s)
 
     step = 0
+    peak_phys = peak_logical = 0
     while eng.active or eng.waiting:
         info = eng.step()
         step += 1
+        pt = info.get("pagetable", {})
+        peak_phys = max(peak_phys, pt.get("physical_pages", 0))
+        peak_logical = max(peak_logical, pt.get("logical_pages", 0))
         if step % 8 == 0 or not (eng.active or eng.waiting):
             occ = " ".join(f"{k}={v:.0%}"
                            for k, v in info.get("occupancy", {}).items())
             print(f"step {step:3d} active={info['active']} "
                   f"swapped={info.get('swapped', 0)} "
                   f"lat={info.get('latency', 0) * 1e3:6.1f} ms "
-                  f"dwp={info.get('dwp', 0):.1f}  {occ}")
+                  f"dwp={info.get('dwp', 0):.1f} "
+                  f"shared={pt.get('shared_pages', 0)}  {occ}")
         if step > 800:
             break
 
     tel = pool.telemetry.snapshot()
     slo = sched.slo.summary(sched.now)
+    pt = pool.table.stats()
     print(f"\nfinished {len(eng.finished)}/{len(trace)} sequences in "
           f"{sched.now:.2f} virtual s; swaps {tel['swap_outs']} out / "
           f"{tel['swap_ins']} in ({tel['swap_seconds'] * 1e3:.0f} ms "
           f"transfer); goodput {slo['goodput_tok_s']:.0f} good tok/s")
+    print(f"KV footprint: peak {peak_logical} logical / {peak_phys} "
+          f"physical pages "
+          f"(x{peak_logical / max(peak_phys, 1):.2f} sharing; "
+          f"physical oversubscription vs hbm_local "
+          f"x{peak_phys / domains[0].num_pages:.1f}); "
+          f"prefix hits {pt['prefix_hit_pages']} pages, "
+          f"cow faults {pt['cow_faults']}, prefill fwd tokens "
+          f"{eng.prefill_tokens_computed}")
     for cls, row in slo["classes"].items():
         print(f"  {cls:12s} done {row['completed']:3d}/{row['submitted']:3d}"
               f"  good {row['good']:3d}  ttft {row['ttft_mean_s'] * 1e3:7.1f}"

@@ -37,6 +37,16 @@ def cost_analysis(compiled) -> dict:
     return ca or {}
 
 
+def pallas_tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across jax versions (0.4.x names it
+    ``TPUCompilerParams``); kwargs — e.g. ``dimension_semantics`` — are
+    identical on both."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
     """Per-shard mapping across jax versions.
 

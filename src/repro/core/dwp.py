@@ -59,6 +59,12 @@ class DWPTuner:
 
     ``on_migrate`` is called with each MigrationPlan so the embedding system
     (simulator page tables, KV-cache pools, ZeRO shards) can execute it.
+
+    ``capacity_fractions`` (optional) are per-node shares of the allocatable
+    pool; when set, every assignment the tuner produces is clamped to them
+    (``interleave.capacity_capped_weights``) — the swap-aware fix: a page
+    pool holding a swap reservation feeds its *effective* capacities here so
+    a high DWP cannot promise pages the reservation took away.
     """
 
     def __init__(
@@ -70,6 +76,7 @@ class DWPTuner:
         on_migrate: Callable[[interleave.MigrationPlan], None] | None = None,
         start_dwp: float = 0.0,
         min_dwp: float = 0.0,
+        capacity_fractions: np.ndarray | None = None,
     ):
         self.cfg = config or DWPConfig()
         self.canonical = interleave.normalize(canonical_weights)
@@ -77,9 +84,10 @@ class DWPTuner:
         self.on_migrate = on_migrate
         self.min_dwp = min_dwp
         self.dwp = max(start_dwp, min_dwp)
+        self.capacity_fractions = capacity_fractions
         self.assignment = interleave.weighted_interleave(
-            num_pages, interleave.dwp_weights(self.canonical, self.workers,
-                                              self.dwp))
+            num_pages, self._capped(interleave.dwp_weights(
+                self.canonical, self.workers, self.dwp)))
         self.phase = Phase.MEASURING
         self._samples: list[float] = []
         self._prev_rate: float | None = None
@@ -130,8 +138,22 @@ class DWPTuner:
         assert self._prev_rate is not None
         return rate < self._prev_rate * (1.0 - self.cfg.rel_tolerance)
 
+    def _capped(self, weights: np.ndarray) -> np.ndarray:
+        if self.capacity_fractions is None:
+            return weights
+        return interleave.capacity_capped_weights(weights,
+                                                  self.capacity_fractions)
+
+    def set_capacity_fractions(self, fractions: np.ndarray) -> int:
+        """Effective capacities changed (a swap reservation was carved out
+        or released): re-clamp the current assignment. Returns pages moved
+        (delivered to ``on_migrate`` like any tuner step)."""
+        self.capacity_fractions = np.asarray(fractions, dtype=np.float64)
+        return self._migrate_to(self.dwp)
+
     def _migrate_to(self, dwp: float) -> int:
-        new_w = interleave.dwp_weights(self.canonical, self.workers, dwp)
+        new_w = self._capped(
+            interleave.dwp_weights(self.canonical, self.workers, dwp))
         plan = interleave.plan_migration(self.assignment, new_w)
         self.assignment = plan.new_assignment
         if self.on_migrate:

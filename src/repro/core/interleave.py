@@ -107,6 +107,44 @@ def dwp_weights(canonical: np.ndarray, workers: Sequence[int],
     return normalize(np.maximum(out, 0.0))  # guard fp cancellation at dwp=1
 
 
+def capacity_capped_weights(weights: np.ndarray,
+                            capacity_fractions: np.ndarray) -> np.ndarray:
+    """Clamp a weight vector to per-node capacity fractions, water-filling
+    the excess onto unclamped nodes (∝ their remaining weight).
+
+    ``capacity_fractions[d]`` is node d's share of the *allocatable* pool
+    (capacities sum to 1). The result never asks a node for more than its
+    share — the swap-aware DWP fix: a high DWP must not promise fast-domain
+    pages that a swap reservation (or small domain) cannot supply.
+    """
+    w = normalize(weights)
+    cap = np.asarray(capacity_fractions, dtype=np.float64)
+    assert w.shape == cap.shape and (cap >= 0).all()
+    if cap.sum() < 1.0 - 1e-9:          # infeasible: fill to capacity shape
+        return normalize(cap)
+    fixed = np.zeros(len(w), dtype=bool)
+    for _ in range(len(w)):
+        over = (w > cap + 1e-12) & ~fixed
+        if not over.any():
+            break
+        excess = float((w[over] - cap[over]).sum())
+        w = w.copy()
+        w[over] = cap[over]
+        fixed |= over
+        free = ~fixed
+        mass = float(w[free].sum())
+        if mass > 0:
+            w[free] += excess * w[free] / mass
+        else:                            # zero-weight free nodes: fill by
+            head = cap[free] - w[free]   # remaining capacity headroom
+            if np.isinf(head).any():     # uncapped nodes split it evenly
+                even = np.isinf(head).astype(np.float64)
+                w[free] += excess * even / even.sum()
+            else:
+                w[free] += excess * head / max(float(head.sum()), 1e-300)
+    return normalize(w)
+
+
 @dataclasses.dataclass(frozen=True)
 class MigrationPlan:
     """Pages to move when re-interleaving from one weight vector to another.

@@ -21,6 +21,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1.0e38
 
 
@@ -73,6 +75,109 @@ def _paged_kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel(table_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, page_size: int,
+                          groups: int, chunk: int, scale: float):
+    """Prefill-mode page walk: a [T,nq,h] query chunk of ONE sequence
+    accumulates online softmax over its pages; query t at absolute position
+    qstart+t sees keys at positions <= its own. The grid dimension walks
+    pages exactly like the decode kernel; queries fold into the accumulator
+    rows ([nkv, T*g, ·]) so both kernels share the update algebra."""
+    pi = pl.program_id(0)
+    np_ = pl.num_programs(0)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qstart_ref[0]
+    page_start = pi * page_size
+
+    # a page participates iff it holds a key visible to the *last* query
+    @pl.when(page_start <= q_start + chunk - 1)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)           # [T, nq, h]
+        k = k_ref[0].astype(jnp.float32)             # [ps, nkv, h]
+        v = v_ref[0].astype(jnp.float32)
+        t, nq, h = q.shape
+        nkv = k.shape[1]
+        qg = jnp.transpose(q.reshape(t, nkv, groups, h),
+                           (1, 0, 2, 3)).reshape(nkv, t * groups, h)
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))))     # [nkv, T*g, ps]
+        s = s * scale
+        kpos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (nkv, t * groups, page_size), 2)
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (nkv, t * groups, page_size), 1) // groups
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # [nkv, T*g, 1]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=2, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))))      # [nkv, T*g, h]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        t, nq, h = o_ref.shape
+        nkv = out.shape[0]
+        out = jnp.transpose(out.reshape(nkv, t, groups, h), (1, 0, 2, 3))
+        o_ref[...] = out.reshape(t, nq, h).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(q, k_pool, v_pool, page_table, q_start, *,
+                            interpret: bool = False):
+    """q [T,nq,h] (one sequence's chunk); pools [P,ps,nkv,h]; page_table
+    [mp] covering positions [0, q_start+T); q_start traced scalar ->
+    [T,nq,h]."""
+    t, nq, h = q.shape
+    ps, nkv = k_pool.shape[1], k_pool.shape[2]
+    mp = page_table.shape[0]
+    groups = nq // nkv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(mp,),
+        in_specs=[
+            pl.BlockSpec((t, nq, h), lambda p, tbl, qs: (0, 0, 0)),
+            pl.BlockSpec((1, ps, nkv, h),
+                         lambda p, tbl, qs: (tbl[p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, nkv, h),
+                         lambda p, tbl, qs: (tbl[p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, nq, h), lambda p, tbl, qs: (0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nkv, t * groups, 1), jnp.float32),   # m
+            pltpu.VMEM((nkv, t * groups, 1), jnp.float32),   # l
+            pltpu.VMEM((nkv, t * groups, h), jnp.float32),   # acc
+        ],
+    )
+    kernel = functools.partial(_paged_prefill_kernel, page_size=ps,
+                               groups=groups, chunk=t,
+                               scale=1.0 / np.sqrt(h))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, nq, h), q.dtype),
+        compiler_params=compat.pallas_tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(page_table, jnp.asarray(q_start, jnp.int32).reshape(1),
+      q, k_pool, v_pool)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pool, v_pool, page_table, lens, *,
                     interpret: bool = False):
@@ -106,7 +211,7 @@ def paged_attention(q, k_pool, v_pool, page_table, lens, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, nq, h), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(page_table, lens, q, k_pool, v_pool)

@@ -7,7 +7,10 @@ import functools
 import jax
 
 from repro.kernels.paged_attention.kernel import paged_attention as _kernel
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_prefill_attention as _prefill_kernel)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_prefill_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))
@@ -21,3 +24,18 @@ def paged_attention(q, k_pool, v_pool, page_table, lens, *,
     if impl == "reference":
         return paged_attention_ref(q, k_pool, v_pool, page_table, lens)
     return _kernel(q, k_pool, v_pool, page_table, lens, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def paged_prefill_attention(q, k_pool, v_pool, page_table, q_start, *,
+                            impl: str = "pallas", interpret: bool = False):
+    """Prefill-mode attention: one sequence's query chunk [T,nq,h] over its
+    page table [mp], causal at absolute positions ``q_start + t``. Prior
+    chunks' K/V is *read from the pool* (the O(n) incremental-prefill path —
+    DESIGN.md §6); the chunk's own K/V must be scattered into its pages
+    before the call."""
+    if impl == "reference":
+        return paged_prefill_attention_ref(q, k_pool, v_pool, page_table,
+                                           q_start)
+    return _prefill_kernel(q, k_pool, v_pool, page_table, q_start,
+                           interpret=interpret)

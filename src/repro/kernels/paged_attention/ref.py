@@ -31,3 +31,32 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, lens):
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bngt,btnh->bngh", probs, v.astype(jnp.float32))
     return out.reshape(b, nq, h).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q, k_pool, v_pool, page_table, q_start):
+    """Prefill-mode oracle: one sequence's query *chunk* attends over its
+    logically-mapped pool pages. q [T,nq,h]; pools [P,ps,nkv,h]; page_table
+    [mp]; query t sits at absolute position ``q_start + t`` and sees pool
+    positions <= its own (prior chunks' K/V — already resident via the page
+    table — plus the causal intra-chunk triangle). This is what makes
+    chunked prefill O(chunk) instead of recomputing the prefix: the chunk's
+    own K/V is scattered into the pool *before* the call, so one gather
+    covers old and new keys alike. Returns [T,nq,h].
+    """
+    t, nq, h = q.shape
+    ps, nkv = k_pool.shape[1], k_pool.shape[2]
+    mp = page_table.shape[0]
+    g = nq // nkv
+
+    k = k_pool[page_table].reshape(mp * ps, nkv, h)      # [S,nkv,h]
+    v = v_pool[page_table].reshape(mp * ps, nkv, h)
+    q5 = q.reshape(t, nkv, g, h)
+    scores = jnp.einsum("tngh,snh->tngs", q5.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(h)
+    kpos = jnp.arange(mp * ps)[None, :]
+    qpos = q_start + jnp.arange(t)[:, None]
+    ok = kpos <= qpos                                    # [T,S] causal
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("tngs,snh->tngh", probs, v.astype(jnp.float32))
+    return out.reshape(t, nq, h).astype(q.dtype)

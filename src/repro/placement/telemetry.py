@@ -112,6 +112,7 @@ class DomainTelemetry:
         self.swap_ins = 0
         self.swap_seconds = 0.0      # Eq.-1 transfer time spent swapping
         self.slo: ClassSloCounters | None = None
+        self._pagetable_stats = None  # callable -> dict (serve.pagetable)
 
     # -- event hooks --------------------------------------------------------
 
@@ -156,6 +157,11 @@ class DomainTelemetry:
             self.slo = ClassSloCounters()
         return self.slo
 
+    def attach_pagetable(self, stats_fn) -> None:
+        """Register the page table's ``stats`` callable so snapshots carry
+        sharing state (shared/unique pages, CoW faults, prefix hits)."""
+        self._pagetable_stats = stats_fn
+
     # -- reporting ----------------------------------------------------------
 
     @property
@@ -188,4 +194,6 @@ class DomainTelemetry:
         }
         if self.slo is not None:
             out["slo"] = self.slo.snapshot()
+        if self._pagetable_stats is not None:
+            out["pagetable"] = self._pagetable_stats()
         return out

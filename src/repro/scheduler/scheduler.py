@@ -71,6 +71,8 @@ class Request:
     max_new: int = 32
     arrival_s: float = 0.0
     state: State = State.QUEUED
+    resume_after: float = 0.0            # stall-preemption cooldown gate
+    probed: bool = False                 # first trie probe already counted
 
     @property
     def produced(self) -> int:
@@ -108,12 +110,22 @@ class RequestScheduler:
                  classes: Sequence[PriorityClass] | None = None,
                  default_class: str = "default",
                  default_max_new: int = 32,
-                 swap: KVSwapManager | None = None):
+                 swap: KVSwapManager | None = None,
+                 stall_preempt_fraction: float | None = None,
+                 stall_preempt_cooldown_s: float = 0.0):
         assert prefill_token_budget >= 1
         self.pool = pool
+        self.table = pool.table          # logical→physical page table
         self.max_batch = max_batch
         self.prefill_token_budget = prefill_token_budget
         self.swap = swap
+        # stall-triggered preemption (Eq. 1): evict a sequence whose own
+        # KV read time exceeds this fraction of the batch read time.
+        # None disables; the cooldown stops an out/in thrash loop.
+        assert stall_preempt_fraction is None \
+            or 0.0 < stall_preempt_fraction < 1.0
+        self.stall_preempt_fraction = stall_preempt_fraction
+        self.stall_preempt_cooldown_s = stall_preempt_cooldown_s
         self.classes: dict[str, PriorityClass] = {}
         for pc in (classes or []):
             self.classes[pc.name] = pc
@@ -191,6 +203,7 @@ class RequestScheduler:
             if nxt is not None and nxt > self.now:
                 self.now = nxt           # idle: jump to the next arrival
         self._priority_preempt()
+        self._stall_preempt()
         self._swap_ins(plan)
         self._plan_prefills(plan)
         self._ensure_growth()
@@ -226,24 +239,38 @@ class RequestScheduler:
         return len(self.running) + len(self.prefilling)
 
     def _growth_need(self, seqs) -> int:
-        """Decode pages the next step will allocate for ``seqs``."""
+        """Decode pages the next step will allocate for ``seqs``: a fresh
+        page on a page boundary, or a CoW clone when the write position
+        falls inside a *shared* page (the full-prompt-match fork)."""
         ps = self.pool.page_size
-        return sum(1 for r in seqs if r.length % ps == 0)
+        n = 0
+        for r in seqs:
+            if r.length % ps == 0:
+                n += 1
+            elif r.pages and self.table.shared(r.pages[r.length // ps]):
+                n += 1
+        return n
 
     # -- preemption -----------------------------------------------------------
+
+    def _exclusive(self, r: Request) -> int:
+        """Pages an eviction of ``r`` actually frees: its refcount-1 pages.
+        Shared (prefix) pages are pinned — other sequences read them."""
+        return len(self.table.exclusive(r.pages))
 
     def victim_score(self, r: Request) -> float:
         """priority-factor x footprint x Eq.-1 stall cost (DESIGN.md §5):
         ``2^-level`` halves a victim's attractiveness per priority level;
-        footprint is what the eviction frees; the stall term prefers
-        sequences whose pages already gate the batch's read time."""
+        footprint is what the eviction frees (exclusive pages only — shared
+        prefix pages stay put); the stall term prefers sequences whose
+        pages already gate the batch's read time."""
         stall = bwmodel.stall_cost(self.pool.bytes_per_domain(r.pages),
                                    self.pool.bw)
-        return (2.0 ** -self.level(r)) * len(r.pages) * (stall + 1e-12)
+        return (2.0 ** -self.level(r)) * self._exclusive(r) * (stall + 1e-12)
 
     def _swap_out(self, r: Request) -> None:
-        pages = len(r.pages)
-        r.pages, secs = self.swap.swap_out(r.pages)
+        pages = self._exclusive(r)
+        r.pages, secs = self.swap.swap_out(r.pages, table=self.table)
         self.running.remove(r)
         r.state = State.SWAPPED
         self.swapped.append(r)
@@ -255,15 +282,16 @@ class RequestScheduler:
     def _reclaim(self, need: int, max_level: int | None = None) -> bool:
         """Swap out victims until ``need`` pages are allocatable. Never
         touches classes above ``max_level`` (capacity pressure from a low
-        class must not evict a high one)."""
+        class must not evict a high one). Victims must free at least one
+        page — evicting an all-shared sequence reclaims nothing."""
         while self.pool.free_count() < need:
             if self.swap is None:
                 return False
             protect = self._plan.swapped_in if self._plan is not None else []
-            victims = [r for r in self.running if r.pages
+            victims = [r for r in self.running if self._exclusive(r) > 0
                        and r not in protect   # no same-step in->out churn
                        and (max_level is None or self.level(r) <= max_level)
-                       and self.swap.can_swap_out(len(r.pages))]
+                       and self.swap.can_swap_out(self._exclusive(r))]
             if not victims:
                 return False
             self._swap_out(max(victims, key=self.victim_score))
@@ -279,9 +307,35 @@ class RequestScheduler:
             return
         cand = cands[0]
         lower = [r for r in self.running if self.level(r) < self.level(cand)
-                 and r.pages and self.swap.can_swap_out(len(r.pages))]
+                 and r.pages and self.swap.can_swap_out(self._exclusive(r))]
         if lower:
             self._swap_out(max(lower, key=self.victim_score))
+
+    def _stall_preempt(self) -> None:
+        """Stall-triggered preemption: when one sequence's Eq.-1 KV read
+        time exceeds ``stall_preempt_fraction`` of the whole batch's read
+        time, its pages are gating every token the batch produces — evict
+        it (the worst offender, one per step) so the rest of the batch runs
+        at the speed of its own placement. The victim sits out
+        ``stall_preempt_cooldown_s`` of virtual time before resuming."""
+        frac = self.stall_preempt_fraction
+        if frac is None or self.swap is None or len(self.running) < 2:
+            return
+        batch = bwmodel.stall_cost(self.pool.bytes_per_domain(
+            [p for r in self.running for p in r.pages]), self.pool.bw)
+        if batch <= 0.0:
+            return
+        offenders = [
+            r for r in self.running
+            if self._exclusive(r) > 0
+            and self.swap.can_swap_out(self._exclusive(r))
+            and bwmodel.stall_cost(self.pool.bytes_per_domain(r.pages),
+                                   self.pool.bw) > frac * batch]
+        if offenders:
+            victim = max(offenders, key=lambda r: bwmodel.stall_cost(
+                self.pool.bytes_per_domain(r.pages), self.pool.bw))
+            victim.resume_after = self.now + self.stall_preempt_cooldown_s
+            self._swap_out(victim)
 
     # -- resume ---------------------------------------------------------------
 
@@ -290,13 +344,17 @@ class RequestScheduler:
         for r in sorted(self.swapped, key=self._order):
             if r in plan.swapped_out:    # no same-step thrash
                 continue
+            if r.resume_after > self.now:   # stall-preemption cooldown
+                continue
             if self._slots_used() >= self.max_batch:
                 break
-            need = (len(r.pages) + (1 if r.length % ps == 0 else 0)
+            # only parked pages re-allocate; pinned shared pages never left
+            need = (self.swap.parked_count(r.pages)
+                    + (1 if r.length % ps == 0 else 0)
                     + self._growth_need(self.running))
             if self.pool.free_count() < need:
                 continue
-            r.pages, secs = self.swap.swap_in(r.pages)
+            r.pages, secs = self.swap.swap_in(r.pages, table=self.table)
             self.swapped.remove(r)
             r.state = State.RUNNING
             self.running.append(r)
@@ -317,6 +375,18 @@ class RequestScheduler:
             if r.state is State.QUEUED \
                     and self._slots_used() >= self.max_batch:
                 continue                 # a lower class may still fit later
+            if r.state is State.QUEUED and not r.pages and r.length == 0:
+                # probe the prefix trie — matched pages join the view
+                # shared (refcount bumps), their K/V already sits in the
+                # pool, and prefill starts past them. A capacity-blocked
+                # request re-probes next step (a donor may register late);
+                # only the first probe counts in telemetry.
+                matched = self.table.match_prefix(
+                    r.tokens[:r.prompt_len], r.pages, count=not r.probed)
+                r.probed = True
+                # a full-prompt match still leaves the last prompt token to
+                # the first decode step (it CoW-forks the shared page)
+                r.length = min(matched, r.prefill_target)
             target = r.prefill_target
             chunk = min(budget, target - r.length)
             hi = r.length + chunk
@@ -329,7 +399,12 @@ class RequestScheduler:
             if self.pool.free_count() < need and \
                     not self._reclaim(need, max_level=self.level(r)):
                 continue
-            r.pages.extend(self.pool.alloc_page() for _ in range(new_pages))
+            self.table.grow(r.pages, new_pages)
+            # NB: trie registration happens in the *engine* after the final
+            # chunk's K/V physically lands (registering at plan time let a
+            # same-step matcher bump refcounts before the donor's write,
+            # which then CoW-forked the donor onto private clones and left
+            # the matcher reading never-written pages)
             if chunk > 0:
                 plan.prefill_chunks.append((r, r.length, hi))
                 budget -= chunk
@@ -353,9 +428,9 @@ class RequestScheduler:
         """The decode batch must be able to allocate its next pages; evict
         (any class — an undecodable batch serves nobody) or fail loudly."""
         while self.pool.free_count() < self._growth_need(self.running):
-            victims = [r for r in self.running if r.pages
+            victims = [r for r in self.running if self._exclusive(r) > 0
                        and self.swap is not None
-                       and self.swap.can_swap_out(len(r.pages))]
+                       and self.swap.can_swap_out(self._exclusive(r))]
             if not victims:
                 raise RuntimeError("KV pool exhausted: decode batch cannot "
                                    "grow and no victim is swappable")
@@ -372,7 +447,9 @@ class RequestScheduler:
     def finish(self, r: Request) -> None:
         r.done = True
         r.state = State.FINISHED
-        self.pool.free_pages(r.pages)
+        # drop this view's references; pages nobody else holds are freed,
+        # pages shared with live sequences stay (and stay matchable)
+        self.table.release(r.pages)
         r.pages = []
         self.running.remove(r)
         self.finished.append(r)

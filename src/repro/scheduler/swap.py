@@ -53,6 +53,7 @@ class KVSwapManager:
                 n = int(len(pool.free[d]) * reserve_fraction)
             self.slots[d] = pool.reserve_pages(d, n)
         self.reserved_total = sum(len(s) for s in self.slots.values())
+        self._out: set[int] = set()   # slot ids currently holding parked KV
 
     # -- capacity ------------------------------------------------------------
 
@@ -61,6 +62,11 @@ class KVSwapManager:
 
     def can_swap_out(self, num_pages: int) -> bool:
         return self.slots_free() >= num_pages
+
+    def parked_count(self, page_ids) -> int:
+        """How many of a view's pages currently sit in reserved slots (the
+        ones swap-in must re-allocate; pinned shared pages never parked)."""
+        return sum(1 for p in page_ids if p in self._out)
 
     # -- placement over the slow-domain subspace ------------------------------
 
@@ -76,46 +82,80 @@ class KVSwapManager:
 
     # -- the round-trip -------------------------------------------------------
 
-    def swap_out(self, page_ids: list[int]) -> tuple[list[int], float]:
+    def swap_out(self, page_ids: list[int],
+                 table=None) -> tuple[list[int], float]:
         """Move a sequence's pages into reserved slow-domain slots; frees the
         sources back to the pool. Returns ``(new_page_ids, seconds)`` with
-        page order preserved (the page table stays positional)."""
-        n = len(page_ids)
+        page order preserved (the view stays positional).
+
+        With ``table`` (a :class:`~repro.serve.pagetable.PageTable`), pages
+        with refcount > 1 are *pinned*: other live sequences read them, so
+        they keep their fast-domain homes and only this sequence's exclusive
+        pages park. Moved pages leave the prefix trie (a parked page must
+        not be matched — its id changes again on swap-in) and are remapped
+        under the table so the refcount follows the bytes."""
+        movable = [p for p in page_ids
+                   if table is None or not table.shared(p)]
+        n = len(movable)
         if n == 0:
-            return [], 0.0
+            return list(page_ids), 0.0
         assert self.can_swap_out(n), "not enough reserved swap slots"
         counts = self._slot_counts(n)
         dst: list[int] = []
         for d, c in zip(self.slow, counts):
             dst.extend(self.slots[d].pop() for _ in range(int(c)))
-        src_doms = [self.pool.domain_of(p) for p in page_ids]
+        src_doms = [self.pool.domain_of(p) for p in movable]
         dst_doms = [self.pool.domain_of(p) for p in dst]
         (self.pool.k_pool, self.pool.v_pool), _ = self.pool.executor.execute(
-            (self.pool.k_pool, self.pool.v_pool), page_ids, dst,
+            (self.pool.k_pool, self.pool.v_pool), movable, dst,
             src_domains=src_doms, dst_domains=dst_doms)
-        self.pool.free_pages(page_ids)
+        moved = dict(zip(movable, dst))
+        if table is not None:
+            for s, d in moved.items():
+                table.unregister(s)
+                table.remap_physical(s, d)
+        self._out.update(dst)
+        self.pool.free_pages(movable)
         seconds = self._transfer_seconds(src_doms, dst_doms)
         self.pool.telemetry.record_swap("out", n, seconds)
-        return dst, seconds
+        return [moved.get(p, p) for p in page_ids], seconds
 
-    def swap_in(self, page_ids: list[int]) -> tuple[list[int], float]:
+    def swap_in(self, page_ids: list[int],
+                table=None) -> tuple[list[int], float]:
         """Bring parked pages back through the pool's live placement policy;
-        vacated slots rejoin the reservation. Caller guarantees the pool has
-        ``len(page_ids)`` allocatable pages (the scheduler checks)."""
-        n = len(page_ids)
+        vacated slots rejoin the reservation. Pages of the view that never
+        parked (pinned shared pages) pass through untouched. Caller
+        guarantees the pool has enough allocatable pages (the scheduler
+        checks against the parked count)."""
+        parked = [p for p in page_ids if p in self._out]
+        n = len(parked)
         if n == 0:
-            return [], 0.0
+            return list(page_ids), 0.0
         dst = [self.pool.alloc_page() for _ in range(n)]
-        src_doms = [self.pool.domain_of(p) for p in page_ids]
+        src_doms = [self.pool.domain_of(p) for p in parked]
         dst_doms = [self.pool.domain_of(p) for p in dst]
         (self.pool.k_pool, self.pool.v_pool), _ = self.pool.executor.execute(
-            (self.pool.k_pool, self.pool.v_pool), page_ids, dst,
+            (self.pool.k_pool, self.pool.v_pool), parked, dst,
             src_domains=src_doms, dst_domains=dst_doms)
-        for pid in page_ids:
-            self.slots[self.pool.domain_of(pid)].append(int(pid))
+        moved = dict(zip(parked, dst))
+        if table is not None:
+            for s, d in moved.items():
+                table.remap_physical(s, d)
+        spilled = False
+        for pid in parked:
+            self._out.discard(pid)
+            d = self.pool.domain_of(pid)
+            if d in self.slots:
+                self.slots[d].append(int(pid))
+            else:   # a rebalance spilled this parked slot into a worker
+                self.pool.free[d].append(int(pid))   # domain: hand it back
+                self.reserved_total -= 1
+                spilled = True
+        if spilled:
+            self._sync_pool_reserved()
         seconds = self._transfer_seconds(src_doms, dst_doms)
         self.pool.telemetry.record_swap("in", n, seconds)
-        return dst, seconds
+        return [moved.get(p, p) for p in page_ids], seconds
 
     def _transfer_seconds(self, src_doms, dst_doms) -> float:
         """Eq.-1 cost of the copy: reads and writes overlap across domains,
@@ -131,6 +171,8 @@ class KVSwapManager:
     def remap(self, id_map: np.ndarray) -> None:
         """Rewrite reserved slot ids after the pool was rebuilt (slots are
         live pages from the pool's perspective, so the id map covers them)."""
+        self._out = {int(id_map[p]) for p in self._out}
+        assert all(p >= 0 for p in self._out), "parked page lost in rebalance"
         for d in list(self.slots):
             self.slots[d] = [int(id_map[p]) for p in self.slots[d]]
             assert all(p >= 0 for p in self.slots[d]), \
@@ -150,3 +192,14 @@ class KVSwapManager:
                     self.pool.free[d].append(p)
                     self.reserved_total -= 1
         self.slots = rekey
+        self._sync_pool_reserved()
+
+    def _sync_pool_reserved(self) -> None:
+        """Mirror the reservation (free slots + parked pages) into the
+        pool's per-domain reserved counts — what swap-aware DWP reads."""
+        counts = np.zeros(len(self.pool.domains), dtype=np.int64)
+        for d, pages in self.slots.items():
+            counts[d] += len(pages)
+        for p in self._out:
+            counts[self.pool.domain_of(p)] += 1
+        self.pool.set_reserved_counts(counts)

@@ -53,6 +53,13 @@ class WorkloadSpec:
     burst_factor: float = 8.0           # gap/mean ratio between bursts
     # heavy_tail
     tail_alpha: float = 1.5             # Pareto shape (smaller = heavier)
+    # shared prefixes (any kind): with probability ``prefix_frac`` a request
+    # prepends one of ``prefix_groups`` common prefixes of ``prefix_len``
+    # tokens — the system prompt / few-shot template pattern that makes
+    # prefix-sharing KV caches pay (DESIGN.md §6)
+    prefix_len: int = 0
+    prefix_groups: int = 1
+    prefix_frac: float = 1.0
 
 
 def _interarrivals(spec: WorkloadSpec, rng: np.random.Generator) -> np.ndarray:
@@ -98,10 +105,16 @@ def generate(spec: WorkloadSpec) -> list[TraceRequest]:
     probs = np.asarray([p for _, p in spec.class_mix], dtype=np.float64)
     probs = probs / probs.sum()
     classes = rng.choice(len(names), size=spec.num_requests, p=probs)
+    prefixes = [tuple(int(t) for t in
+                      rng.integers(1, spec.vocab_size, spec.prefix_len))
+                for _ in range(spec.prefix_groups)] if spec.prefix_len else []
     out = []
     for i in range(spec.num_requests):
-        prompt = tuple(int(t) for t in
-                       rng.integers(1, spec.vocab_size, int(lens[i])))
+        head: tuple[int, ...] = ()
+        if prefixes and rng.uniform() < spec.prefix_frac:
+            head = prefixes[int(rng.integers(len(prefixes)))]
+        prompt = head + tuple(int(t) for t in
+                              rng.integers(1, spec.vocab_size, int(lens[i])))
         out.append(TraceRequest(arrival_s=float(arrivals[i]), prompt=prompt,
                                 max_new=spec.max_new,
                                 cls=names[int(classes[i])]))

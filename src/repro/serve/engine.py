@@ -46,6 +46,53 @@ class PagedDecoder:
             return jax.tree.map(lambda x: x[l], gp)
         return gp[l]
 
+    def prefill_chunk(self, token_ids, pages, lo: int, hi: int):
+        """Incremental chunked prefill: materialize K/V for prompt positions
+        [lo, hi) with O(hi-lo) compute. Per layer the chunk's K/V scatters
+        into its pages first, then the chunk queries run prefill-mode paged
+        attention over the sequence's page table — prior chunks' (and any
+        trie-shared prefix's) K/V is *read from the pool*, never recomputed.
+        Same per-layer algebra as ``decode_step`` with T tokens at once."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        t = hi - lo
+        nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+        ps = self.pool.page_size
+        toks = jnp.asarray([token_ids[lo:hi]], jnp.int32)
+        x = self.params["embed"][toks].astype(cdt)       # [1,T,d]
+        if cfg.embed_scale:
+            x = x * np.sqrt(cfg.d_model)
+        pos = jnp.arange(lo, hi, dtype=jnp.int32)[None]  # [1,T]
+        positions = np.arange(lo, hi)
+        pids = np.asarray([pages[p // ps] for p in positions], np.int32)
+        slots = (positions % ps).astype(np.int32)
+        tbl = jnp.asarray(pages[:-(-hi // ps)], jnp.int32)
+
+        for l in range(cfg.num_layers):
+            p = self._layer(l)
+            h = L.apply_norm(cfg, p["norm1"], x)
+            q = (h @ p["attn"]["wq"].astype(cdt)).reshape(1, t, nq, hd)
+            k = (h @ p["attn"]["wk"].astype(cdt)).reshape(1, t, nkv, hd)
+            v = (h @ p["attn"]["wv"].astype(cdt)).reshape(1, t, nkv, hd)
+            if cfg.qkv_bias:
+                q = q + p["attn"]["bq"].astype(cdt).reshape(nq, hd)
+                k = k + p["attn"]["bk"].astype(cdt).reshape(nkv, hd)
+                v = v + p["attn"]["bv"].astype(cdt).reshape(nkv, hd)
+            if cfg.use_rope:
+                q = L.apply_rope(q, pos, cfg.rope_theta)
+                k = L.apply_rope(k, pos, cfg.rope_theta)
+            # chunk K/V lands before attention: the causal mask then covers
+            # prefix and intra-chunk keys uniformly
+            self.pool.k_pool = self.pool.k_pool.at[l, pids, slots].set(k[0])
+            self.pool.v_pool = self.pool.v_pool.at[l, pids, slots].set(v[0])
+            att = paged_ops.paged_prefill_attention(
+                q[0], self.pool.k_pool[l], self.pool.v_pool[l], tbl,
+                jnp.int32(lo), impl="reference")
+            x = x + (att.reshape(1, t, nq * hd)
+                     @ p["attn"]["wo"].astype(cdt))
+            h = L.apply_norm(cfg, p["norm2"], x)
+            x = x + L.mlp_apply(cfg, p["mlp"], h)
+
     def decode_step(self, tokens, tables, lens, positions):
         """tokens [B,1]; tables [B,MP]; lens [B]; positions [B]."""
         cfg = self.cfg
@@ -100,9 +147,12 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, pool: BwapPagePool,
                  max_batch: int = 8, max_new: int = 32, seed: int = 0,
                  scheduler: RequestScheduler | None = None,
-                 wall_clock: bool = True, sim_step_s: float = 0.0):
+                 wall_clock: bool = True, sim_step_s: float = 0.0,
+                 incremental_prefill: bool = True,
+                 prefix_reuse: bool = True):
         self.cfg = cfg
         self.pool = pool
+        self.table = pool.table
         self.model = LM(cfg)
         self.decoder = PagedDecoder(cfg, params, pool)
         self.params = params
@@ -114,6 +164,13 @@ class ServeEngine:
         # sim_step_s then stands in for per-step compute time
         self.wall_clock = wall_clock
         self.sim_step_s = sim_step_s
+        # incremental_prefill=False falls back to prefix recompute (the
+        # bit-exactness oracle); prefix_reuse=False disables trie matching
+        # (the footprint baseline benchmarks compare against)
+        self.incremental_prefill = incremental_prefill
+        self.table.prefix_reuse = prefix_reuse
+        self.prefill_tokens_computed = 0   # forward-pass tokens spent on
+        self.prefill_chunks_run = 0        # prefill (the O(n) vs O(n²) gap)
         self.latencies: list[float] = []
 
     # scheduler views under the pre-scheduler attribute names
@@ -135,17 +192,37 @@ class ServeEngine:
         return self.scheduler.submit(prompt, cls=cls, max_new=max_new,
                                      arrival_s=arrival_s)
 
-    # -- chunked prefill: forward over the prefix, scatter K/V for the chunk --
+    # -- chunked prefill ------------------------------------------------------
 
     def _prefill_chunk(self, seq: Sequence_, lo: int, hi: int):
-        """Materialize K/V for prompt positions [lo, hi). Causal attention
-        makes position p's K/V depend only on tokens[:p+1], so recomputing
-        the prefix forward gives bit-identical results to one-shot prefill;
-        the scheduler's token budget bounds hi-lo (new KV per step), which
-        is the decode-interference term chunking exists to cap. The last
-        prompt token is never prefilled — the first decode step consumes it
-        and writes its K/V at the true position (double-writing it shifted
-        the decode RoPE position by one)."""
+        """Materialize K/V for prompt positions [lo, hi). Two paths:
+
+        - **incremental** (default): O(hi-lo) — the chunk reads prior
+          chunks' (and trie-shared prefix) K/V from the pool through the
+          prefill-mode paged-attention op. Long-prompt admission is O(n)
+          across chunks.
+        - **recompute**: forward over ``tokens[:hi]``, scatter [lo, hi) —
+          O(hi) per chunk, O(n²) across chunks; kept as the exactness
+          oracle (causal attention makes position p's K/V depend only on
+          tokens[:p+1], so it equals one-shot prefill bit-for-bit).
+
+        The last prompt token is never prefilled — the first decode step
+        consumes it and writes its K/V at the true position (double-writing
+        it shifted the decode RoPE position by one)."""
+        if hi <= lo:
+            return
+        # defensive CoW: prefill chunks land in freshly-allocated exclusive
+        # pages, but a fork here is what keeps a mis-planned write from
+        # corrupting another sequence's shared prefix
+        self.table.ensure_writable(seq.pages, lo, hi)
+        self.prefill_chunks_run += 1
+        if self.incremental_prefill:
+            self.prefill_tokens_computed += hi - lo
+            self.decoder.prefill_chunk(seq.tokens, seq.pages, lo, hi)
+            seq.length = hi
+            self._register_if_done(seq, hi)
+            return
+        self.prefill_tokens_computed += hi
         ps = self.pool.page_size
         toks = jnp.asarray([seq.tokens[:hi]], jnp.int32)
         x = self.model.embed(self.params, {"tokens": toks})
@@ -165,6 +242,15 @@ class ServeEngine:
         self.pool.k_pool = self.pool.k_pool.at[:, pids, slots].set(k[:, lo:hi])
         self.pool.v_pool = self.pool.v_pool.at[:, pids, slots].set(v[:, lo:hi])
         seq.length = hi
+        self._register_if_done(seq, hi)
+
+    def _register_if_done(self, seq: Sequence_, hi: int) -> None:
+        """Final chunk just landed: the prompt pages' bytes are now real —
+        only now may they enter the prefix trie (registering any earlier
+        lets a matcher reference pages that were never written)."""
+        if hi >= seq.prefill_target:
+            self.table.register_prefix(seq.tokens, seq.pages,
+                                       seq.prefill_target)
 
     def step(self) -> dict:
         t0 = time.monotonic()
@@ -178,10 +264,14 @@ class ServeEngine:
         ps = self.pool.page_size
         done: list[Sequence_] = []
         if batch:
-            # grow pages where needed (the scheduler reserved capacity)
+            # grow pages where needed (the scheduler reserved capacity);
+            # a decode write into a shared page — the full-prompt-match
+            # case: position prompt_len-1 lives in a trie page — forks it
             for s in batch:
                 if s.length % ps == 0:
-                    s.pages.append(self.pool.alloc_page())
+                    self.table.append_page(s.pages)
+                else:
+                    self.table.fork_for_write(s.pages, s.length // ps)
             mp = max(len(s.pages) for s in batch)
             tables = np.zeros((len(batch), mp), np.int32)
             for i, s in enumerate(batch):
@@ -222,10 +312,13 @@ class ServeEngine:
             # where the live pages sit and would trigger spurious re-homing
             if self.pool.record_latency(dt - plan.swap_seconds):
                 # the tuner moved the allocation cycle: re-home live
-                # sequences (batched gather/scatter through the executor)
+                # sequences (batched gather/scatter through the executor);
+                # shared pages are pinned and refcounts follow the moves
                 for s in self.scheduler.running:
-                    s.pages = self.pool.migrate_sequence(s.pages)
+                    s.pages = self.pool.migrate_sequence(s.pages,
+                                                         table=self.table)
                 moved = True
+        tel = self.pool.telemetry.snapshot()
         return {"active": len(self.scheduler.running),
                 "latency": dt, "migrated": moved,
                 "dwp": self.pool.tuner.dwp,
@@ -233,7 +326,11 @@ class ServeEngine:
                 "swapped": len(self.scheduler.swapped),
                 "swapped_out": len(plan.swapped_out),
                 "swapped_in": len(plan.swapped_in),
-                "telemetry": self.pool.telemetry.snapshot()}
+                # one stats() pass per step: the snapshot already carries
+                # the page-table block via telemetry.attach_pagetable
+                "pagetable": tel.get("pagetable", self.table.stats()),
+                "prefill_tokens_computed": self.prefill_tokens_computed,
+                "telemetry": tel}
 
     def remap_pages(self, id_map: np.ndarray) -> None:
         """Rewrite page tables after the pool was rebalanced (arbiter

@@ -31,6 +31,7 @@ from repro.models.config import ModelConfig
 from repro.placement import policy as placement_policy
 from repro.placement.executor import MigrationExecutor
 from repro.placement.telemetry import DomainTelemetry
+from repro.serve.pagetable import PageTable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +86,9 @@ class BwapPagePool:
         self.free: list[list[int]] = [
             list(range(self.offsets[i], self.offsets[i + 1]))
             for i in range(len(self.domains))]
+        # swap-slot reservations per domain (reserve_pages): off the free
+        # lists AND off the capacities any placement decision sees
+        self.reserved = np.zeros(len(self.domains), dtype=np.int64)
 
         self.bw = np.asarray([d.read_bw for d in self.domains])
         # bandwidth-descending fallback order for exhausted allocation cycles
@@ -98,6 +102,11 @@ class BwapPagePool:
         self.telemetry = telemetry or DomainTelemetry(
             [d.name for d in self.domains])
         self.executor = MigrationExecutor(telemetry=self.telemetry)
+        # logical→physical indirection: refcounts, prefix trie, CoW forks.
+        # The pool stays the *physical* allocator; the serving stack (engine,
+        # scheduler, swap) goes through the table for page lifetime.
+        self.table = PageTable(self)
+        self.telemetry.attach_pagetable(self.table.stats)
         self._external_tuner = tuner is not None
         self.tuner = tuner if tuner is not None else DWPTuner(
             self.canonical, list(self.workers),
@@ -115,13 +124,16 @@ class BwapPagePool:
     # -- placement ----------------------------------------------------------
 
     def _ctx(self, dwp: float) -> placement_policy.PlacementContext:
+        # effective capacities: swap reservations are parking space, not
+        # allocatable pages — policies must not count them
         return placement_policy.PlacementContext(
             bandwidths=np.asarray([d.read_bw for d in self.domains]),
             num_pages=self.total_pages,
             workers=tuple(i for i, d in enumerate(self.domains)
                           if d.is_worker),
             dwp=dwp,
-            capacities=np.asarray([d.num_pages for d in self.domains]))
+            capacities=np.asarray([d.num_pages for d in self.domains])
+            - self.reserved)
 
     @property
     def weights(self) -> np.ndarray:
@@ -160,14 +172,40 @@ class BwapPagePool:
         """Take ``n`` free pages out of ``domain``'s free list without
         counting them as allocations: the scheduler's swap manager holds
         them as parking slots for preempted KV state, so ``alloc_page``
-        never hands them to live sequences."""
+        never hands them to live sequences. The reservation also leaves the
+        domain's *capacity* as the DWP tuner sees it (swap-aware DWP)."""
         if n > len(self.free[domain]):
             raise RuntimeError(
                 f"cannot reserve {n} pages in domain "
                 f"{self.domains[domain].name!r}: {len(self.free[domain])} "
                 "free")
         taken = [self.free[domain].pop() for _ in range(n)]
+        self.reserved[domain] += n
+        self._refresh_tuner_capacity()
         return taken
+
+    def set_reserved_counts(self, counts: Sequence[int]) -> None:
+        """The swap manager re-keyed its reservation (arbiter rebalance):
+        resynchronize per-domain reserved counts and re-clamp the tuner."""
+        self.reserved = np.asarray(counts, dtype=np.int64)
+        self._refresh_tuner_capacity()
+
+    def _refresh_tuner_capacity(self) -> None:
+        """Feed the tuner the *effective* (unreserved) capacities so its
+        allocation cycle never promises a reserved-away page. Domains with
+        no reservation stay uncapped (np.inf) — canonical over-weighting of
+        a small fast domain is a policy choice the fallback order absorbs;
+        promising pages a reservation holds is simply wrong."""
+        if self._external_tuner or not hasattr(self.tuner,
+                                               "set_capacity_fractions"):
+            return
+        caps = np.asarray([d.num_pages for d in self.domains],
+                          dtype=np.float64) - self.reserved
+        allocatable = float(caps.sum())
+        if allocatable <= 0:
+            return
+        frac = np.where(self.reserved > 0, caps / allocatable, np.inf)
+        self.tuner.set_capacity_fractions(frac)
 
     def free_count(self) -> int:
         """Pages currently allocatable (reserved swap slots excluded —
@@ -216,17 +254,26 @@ class BwapPagePool:
         self.tuner.record(seconds)
         return not np.array_equal(before, self.tuner.assignment)
 
-    def migrate_sequence(self, page_ids: list[int]) -> list[int]:
+    def migrate_sequence(self, page_ids: list[int],
+                         table: PageTable | None = None) -> list[int]:
         """Re-place an existing sequence's pages per the current weights
         (the incremental migration of §III-B2): returns new page ids.
-        All physical copies happen in one batched gather/scatter."""
+        All physical copies happen in one batched gather/scatter.
+
+        Shared pages (refcount > 1 under ``table``, defaulting to this
+        pool's own table) are *pinned* — the caller speaks for only one of
+        their holders — and moved table-tracked pages are remapped so
+        refcounts and trie nodes follow. Pages the table never saw (raw
+        callers that allocate via ``alloc_page`` directly) move with no
+        bookkeeping, as before."""
+        tbl = table if table is not None else self.table
         target = interleave.weighted_interleave(len(page_ids), self.weights)
         new_ids: list[int] = []
         src: list[int] = []
         dst: list[int] = []
         for pid, dom in zip(page_ids, target):
             cur = self.domain_of(pid)
-            if cur == int(dom) or not self.free[int(dom)]:
+            if tbl.shared(pid) or cur == int(dom) or not self.free[int(dom)]:
                 new_ids.append(int(pid))
                 continue
             nid = self.free[int(dom)].pop()
@@ -238,8 +285,10 @@ class BwapPagePool:
                 (self.k_pool, self.v_pool), src, dst,
                 src_domains=[self.domain_of(p) for p in src],
                 dst_domains=[self.domain_of(p) for p in dst])
-            for pid in src:  # release sources only after the batched copy
-                self.free[self.domain_of(pid)].append(pid)
+            for s, d in zip(src, dst):
+                if s in tbl.ref:
+                    tbl.remap_physical(s, d)
+                self.free[self.domain_of(s)].append(s)  # after batched copy
         return new_ids
 
     # -- capacity (arbiter rebalancing) ---------------------------------------
@@ -301,6 +350,7 @@ class BwapPagePool:
                                        int(new_offsets[d + 1]))
                       if p not in taken[d]]
                      for d in range(len(self.domains))]
+        self.table.remap(id_map)
         self.telemetry.record_rebalance()
         return id_map
 

@@ -111,3 +111,28 @@ def test_migration_moves_toward_workers_when_dwp_increases():
     frac0 = interleave.page_fractions(plan.old_assignment, 4)[:2].sum()
     frac1 = interleave.page_fractions(plan.new_assignment, 4)[:2].sum()
     assert frac1 > frac0
+
+
+def test_capacity_capped_weights_waterfill():
+    w = interleave.normalize(np.asarray([6.0, 3.0, 1.0]))
+    cap = np.asarray([0.4, np.inf, np.inf])
+    out = interleave.capacity_capped_weights(w, cap)
+    assert out.sum() == pytest.approx(1.0)
+    assert out[0] == pytest.approx(0.4)
+    # excess redistributes proportionally to the unclamped weights (3:1)
+    assert out[1] / out[2] == pytest.approx(3.0)
+    # cascading clamp: redistribution may push another node over its cap
+    out2 = interleave.capacity_capped_weights(
+        w, np.asarray([0.4, 0.35, np.inf]))
+    assert out2 == pytest.approx([0.4, 0.35, 0.25])
+    # uncapped (all inf) is the identity
+    np.testing.assert_allclose(
+        interleave.capacity_capped_weights(w, np.full(3, np.inf)), w)
+    # infeasible caps (sum < 1) degrade to the capacity shape
+    out3 = interleave.capacity_capped_weights(w, np.asarray([0.2, 0.2, 0.1]))
+    np.testing.assert_allclose(out3, np.asarray([0.4, 0.4, 0.2]))
+    # every positive-weight node capped, excess landing on zero-weight
+    # uncapped nodes: must water-fill evenly, not NaN (inf/inf)
+    out4 = interleave.capacity_capped_weights(
+        np.asarray([0.5, 0.5, 0.0]), np.asarray([0.3, 0.3, np.inf]))
+    np.testing.assert_allclose(out4, np.asarray([0.3, 0.3, 0.4]))

@@ -93,6 +93,26 @@ def test_workload_kind_shapes():
     assert lens.max() > 4 * np.percentile(lens, 50)   # a heavy tail exists
 
 
+def test_workload_shared_prefixes():
+    spec = WorkloadSpec(kind="heavy_tail", num_requests=40, prompt_mean=6,
+                        prompt_max=24, vocab_size=500, seed=2,
+                        prefix_len=12, prefix_groups=2, prefix_frac=0.8)
+    t1, t2 = generate(spec), generate(spec)
+    assert t1 == t2                                   # still deterministic
+    heads = {}
+    for r in t1:
+        heads.setdefault(r.prompt[:12], 0)
+        heads[r.prompt[:12]] += 1
+    # at most 2 shared heads dominate; the rest are unique leading tokens
+    shared = sorted(heads.values(), reverse=True)[:2]
+    assert sum(shared) >= 0.5 * len(t1)
+    assert len([h for h, n in heads.items() if n > 1]) <= 2
+    # prefix_len=0 keeps the original generator byte-for-byte
+    base = WorkloadSpec(kind="heavy_tail", num_requests=8, seed=3)
+    assert generate(base) == generate(dataclasses.replace(
+        base, prefix_groups=4, prefix_frac=0.5))
+
+
 # ---------------------------------------------------------------------------
 # SLO accounting
 # ---------------------------------------------------------------------------
@@ -233,6 +253,10 @@ def test_remap_returns_worker_domain_slots_to_allocator(small_lm):
 def test_chunked_prefill_respects_token_budget(small_lm):
     cfg, _ = small_lm
     pool = _pool(cfg, fast=32, peer=8, host=8)
+    # the second prompt is a prefix of the first: disable trie matching so
+    # the budget accounting below counts every prompt token (sharing has
+    # its own tests in test_pagetable.py)
+    pool.table.prefix_reuse = False
     sched = RequestScheduler(pool, max_batch=4, prefill_token_budget=5,
                              default_max_new=4)
     sched.submit(list(range(1, 18)))          # prompt 17 -> target 16 tokens
@@ -340,6 +364,72 @@ def test_joint_exhaustion_raises_not_spins(small_lm):
                     r.pages.append(pool.alloc_page())
                 r.tokens.append(1)
                 r.length += 1
+
+
+def test_stall_preemption_evicts_read_time_hog(small_lm):
+    """A sequence whose pages sit in a glacial domain dominates the batch's
+    Eq.-1 read time: the stall trigger must evict exactly it (and only when
+    the trigger is enabled)."""
+    cfg, _ = small_lm
+
+    def setup(frac):
+        pool = _pool(cfg, fast=16, peer=12, host=12)
+        swap = KVSwapManager(pool, reserve_fraction=0.8)
+        sched = RequestScheduler(pool, max_batch=4, prefill_token_budget=64,
+                                 default_max_new=8, swap=swap,
+                                 stall_preempt_fraction=frac,
+                                 stall_preempt_cooldown_s=10.0)
+        sched.submit([1, 2, 3, 4, 5])
+        sched.submit([6, 7, 8, 9, 10])
+        plan = sched.schedule()                  # both prefill + run
+        for r, lo, hi in plan.prefill_chunks:
+            r.length = hi
+        hog, other = sched.running
+        # drag the hog's pages into the slowest domain by hand (domain 2),
+        # carrying the page-table refs along like a real mover would
+        new = [pool.free[2].pop() for _ in hog.pages]
+        for old, n in zip(hog.pages, new):
+            pool.free[pool.domain_of(old)].append(old)
+            pool.table.remap_physical(old, n)
+        hog.pages[:] = new
+        return pool, sched, hog, other
+
+    pool, sched, hog, other = setup(0.5)
+    sched.schedule()
+    assert hog in sched.swapped                  # evicted: it gated reads
+    assert other in sched.running
+    assert hog.resume_after > sched.now          # cooldown armed
+    sched.schedule()
+    assert hog in sched.swapped                  # cooldown blocks thrash
+
+    pool2, sched2, hog2, _ = setup(None)         # trigger disabled
+    sched2.schedule()
+    assert hog2 in sched2.running
+
+
+def test_swap_aware_dwp_respects_reservation(small_lm):
+    """Reserved swap slots must leave the capacities the DWP tuner sees:
+    with every slow page reserved, the allocation cycle may only promise
+    worker-domain pages (roadmap: swap-aware DWP)."""
+    cfg, _ = small_lm
+    pool = _pool(cfg, fast=8, peer=8, host=8, n=4)
+    assert pool.tuner.capacity_fractions is None     # no reservation yet
+    swap = KVSwapManager(pool, reserve_fraction=1.0)
+    assert swap.reserved_total == 16
+    np.testing.assert_array_equal(pool.reserved, [0, 8, 8])
+    # effective capacities reach placement decisions (policy context)...
+    np.testing.assert_array_equal(pool._ctx(0.0).capacities, [8, 0, 0])
+    # ...and the tuner's cycle stops promising reserved-away pages
+    assert set(int(d) for d in pool.tuner.assignment) == {0}
+    # partial reservation: only the reserved domain's share is capped (at
+    # its unreserved fraction of the allocatable pool); others stay free
+    pool2 = _pool(cfg, fast=8, peer=8, host=8, n=4)
+    KVSwapManager(pool2, reserve_pages={"hbm_peer": 6})
+    np.testing.assert_array_equal(pool2.reserved, [0, 6, 0])
+    np.testing.assert_array_equal(pool2._ctx(0.0).capacities, [8, 2, 8])
+    frac = pool2.tuner.capacity_fractions
+    assert frac is not None and frac[1] == pytest.approx(2 / 18)
+    assert np.isinf(frac[0]) and np.isinf(frac[2])
 
 
 # ---------------------------------------------------------------------------
