@@ -125,6 +125,14 @@ def main() -> None:
     _hdr("Prefix sharing — peak KV footprint, reuse on vs off")
     scheduler_bench.prefix_compare(seed=args.seed, check=False)
 
+    _hdr("Speculative decode — steps saved vs greedy (token-identical)")
+    from benchmarks import serve_bench
+    # check=False: the sweep accepts arbitrary --seed values; the hard
+    # token-identity + step-ratio gate runs on the benchmark's own (CI)
+    # entry point. Emits BENCH_serve.json (goodput, acceptance rate,
+    # decode steps saved, prefill forward tokens).
+    serve_bench.speculative_compare(seed=args.seed, check=False)
+
     if not args.skip_dryrun_table:
         _hdr("Dry-run + roofline aggregation")
         from benchmarks import roofline_table

@@ -34,6 +34,10 @@ def main():
                     choices=["poisson", "bursty", "heavy_tail"])
     ap.add_argument("--prefix-len", type=int, default=16,
                     help="shared system-prompt length (0 disables)")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="speculative decode with a K-token prompt-lookup "
+                         "drafter (0 disables; outputs stay token-identical "
+                         "to greedy)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -63,8 +67,12 @@ def main():
     # virtual clock on the Eq.-1 analytic terms + a 20 ms compute stand-in:
     # wall time on a CPU host is dominated by jit compiles and would drown
     # the SLO numbers in noise
+    drafter = None
+    if args.spec > 0:
+        from repro.serve.spec import PromptLookupDrafter
+        drafter = PromptLookupDrafter(max_tokens=args.spec, max_ngram=3)
     eng = ServeEngine(cfg, params, pool, scheduler=sched, wall_clock=False,
-                      sim_step_s=0.02)
+                      sim_step_s=0.02, drafter=drafter)
 
     trace = generate(WorkloadSpec(
         kind=args.kind, num_requests=args.requests,
@@ -113,6 +121,13 @@ def main():
           f"{sched.now:.2f} virtual s; swaps {tel['swap_outs']} out / "
           f"{tel['swap_ins']} in ({tel['swap_seconds'] * 1e3:.0f} ms "
           f"transfer); goodput {slo['goodput_tok_s']:.0f} good tok/s")
+    if args.spec > 0:
+        sp = tel["spec"]
+        print(f"speculation: {eng.tokens_emitted} tokens in "
+              f"{eng.decode_steps} decode steps "
+              f"({eng.tokens_emitted - eng.decode_steps} steps saved); "
+              f"acceptance {sp['acceptance_rate']:.0%} "
+              f"({sp['accepted']}/{sp['drafted']} drafted)")
     print(f"KV footprint: peak {peak_logical} logical / {peak_phys} "
           f"physical pages "
           f"(x{peak_logical / max(peak_phys, 1):.2f} sharing; "

@@ -135,6 +135,113 @@ def _paged_prefill_kernel(table_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[...] = out.reshape(t, nq, h).astype(o_ref.dtype)
 
 
+def _paged_prefill_batch_kernel(table_ref, qstart_ref, q_ref, k_ref, v_ref,
+                                o_ref, m_ref, l_ref, acc_ref, *,
+                                page_size: int, groups: int, chunk: int,
+                                scale: float):
+    """Batched prefill-mode page walk: grid (b, mp) — sequence b's [T,nq,h]
+    chunk at absolute start ``qstart_ref[b]`` accumulates online softmax
+    over *its own* page table row, exactly the single-sequence prefill
+    kernel per grid row. One launch fuses same-step chunks of different
+    sequences (batched incremental prefill) and the speculative verify
+    step's draft chunks."""
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qstart_ref[b]
+    page_start = pi * page_size
+
+    # a page participates iff it holds a key visible to the last query
+    @pl.when(page_start <= q_start + chunk - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)             # [T, nq, h]
+        k = k_ref[0].astype(jnp.float32)             # [ps, nkv, h]
+        v = v_ref[0].astype(jnp.float32)
+        t, nq, h = q.shape
+        nkv = k.shape[1]
+        qg = jnp.transpose(q.reshape(t, nkv, groups, h),
+                           (1, 0, 2, 3)).reshape(nkv, t * groups, h)
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))))     # [nkv, T*g, ps]
+        s = s * scale
+        kpos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (nkv, t * groups, page_size), 2)
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (nkv, t * groups, page_size), 1) // groups
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # [nkv, T*g, 1]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=2, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))))      # [nkv, T*g, h]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        _, t, nq, h = o_ref.shape
+        nkv = out.shape[0]
+        out = jnp.transpose(out.reshape(nkv, t, groups, h), (1, 0, 2, 3))
+        o_ref[0] = out.reshape(t, nq, h).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention_batch(q, k_pool, v_pool, page_table, q_start, *,
+                                  interpret: bool = False):
+    """q [B,T,nq,h] (per-sequence chunks, padded to a common T); pools
+    [P,ps,nkv,h]; page_table [B,mp] (pad with page 0); q_start [B] traced
+    -> [B,T,nq,h]."""
+    b, t, nq, h = q.shape
+    ps, nkv = k_pool.shape[1], k_pool.shape[2]
+    mp = page_table.shape[1]
+    groups = nq // nkv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((1, t, nq, h), lambda b, p, tbl, qs: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, nkv, h),
+                         lambda b, p, tbl, qs: (tbl[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, nkv, h),
+                         lambda b, p, tbl, qs: (tbl[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, nq, h),
+                               lambda b, p, tbl, qs: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nkv, t * groups, 1), jnp.float32),   # m
+            pltpu.VMEM((nkv, t * groups, 1), jnp.float32),   # l
+            pltpu.VMEM((nkv, t * groups, h), jnp.float32),   # acc
+        ],
+    )
+    kernel = functools.partial(_paged_prefill_batch_kernel, page_size=ps,
+                               groups=groups, chunk=t,
+                               scale=1.0 / np.sqrt(h))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, nq, h), q.dtype),
+        compiler_params=compat.pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, jnp.asarray(q_start, jnp.int32).reshape(b),
+      q, k_pool, v_pool)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_prefill_attention(q, k_pool, v_pool, page_table, q_start, *,
                             interpret: bool = False):

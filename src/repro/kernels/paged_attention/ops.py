@@ -9,8 +9,11 @@ import jax
 from repro.kernels.paged_attention.kernel import paged_attention as _kernel
 from repro.kernels.paged_attention.kernel import (
     paged_prefill_attention as _prefill_kernel)
-from repro.kernels.paged_attention.ref import (paged_attention_ref,
-                                               paged_prefill_attention_ref)
+from repro.kernels.paged_attention.kernel import (
+    paged_prefill_attention_batch as _prefill_batch_kernel)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_ref, paged_prefill_attention_batch_ref,
+    paged_prefill_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret"))
@@ -39,3 +42,20 @@ def paged_prefill_attention(q, k_pool, v_pool, page_table, q_start, *,
                                            q_start)
     return _prefill_kernel(q, k_pool, v_pool, page_table, q_start,
                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def paged_prefill_attention_batch(q, k_pool, v_pool, page_table, q_start, *,
+                                  impl: str = "pallas",
+                                  interpret: bool = False):
+    """Batched prefill-mode attention: B sequences' query chunks [B,T,nq,h]
+    (padded to a common T) over per-sequence page tables [B,mp], causal at
+    absolute positions ``q_start[b] + t``. One launch fuses same-step
+    prefill chunks of different sequences and the speculative verify step's
+    draft chunks (DESIGN.md §7); each chunk's own K/V must be scattered
+    into its pages before the call."""
+    if impl == "reference":
+        return paged_prefill_attention_batch_ref(q, k_pool, v_pool,
+                                                 page_table, q_start)
+    return _prefill_batch_kernel(q, k_pool, v_pool, page_table, q_start,
+                                 interpret=interpret)

@@ -111,6 +111,13 @@ class DomainTelemetry:
         self.swap_outs = 0           # preemption swap round-trips (pages)
         self.swap_ins = 0
         self.swap_seconds = 0.0      # Eq.-1 transfer time spent swapping
+        # speculative decode (DESIGN.md §7): one verify step replaces up to
+        # 1 + accepted decode steps; acceptance rate is the fraction of
+        # drafted tokens the model's own argmax confirmed
+        self.spec_steps = 0          # verify steps with at least one draft
+        self.spec_drafted = 0        # draft tokens proposed
+        self.spec_accepted = 0       # draft tokens accepted
+        self.spec_emitted = 0        # tokens emitted by verify steps
         self.slo: ClassSloCounters | None = None
         self._pagetable_stats = None  # callable -> dict (serve.pagetable)
 
@@ -150,6 +157,14 @@ class DomainTelemetry:
         else:
             self.swap_ins += pages
         self.swap_seconds += float(seconds)
+
+    def record_spec(self, drafted: int, accepted: int,
+                    emitted: int) -> None:
+        """One speculative verify step's draft/accept/emit totals."""
+        self.spec_steps += 1
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
 
     def attach_slo(self) -> ClassSloCounters:
         """Create (or return) the per-class SLO counter block."""
@@ -191,6 +206,14 @@ class DomainTelemetry:
             "swap_outs": self.swap_outs,
             "swap_ins": self.swap_ins,
             "swap_seconds": self.swap_seconds,
+            "spec": {
+                "steps": self.spec_steps,
+                "drafted": self.spec_drafted,
+                "accepted": self.spec_accepted,
+                "emitted": self.spec_emitted,
+                "acceptance_rate": (self.spec_accepted
+                                    / max(self.spec_drafted, 1)),
+            },
         }
         if self.slo is not None:
             out["slo"] = self.slo.snapshot()

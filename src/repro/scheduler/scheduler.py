@@ -56,10 +56,16 @@ class State(enum.Enum):
     FINISHED = "finished"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     """One sequence; the engine's ``Sequence_`` fields are preserved
-    (``sid``/``tokens``/``pages``/``prompt_len``/``length``/``done``)."""
+    (``sid``/``tokens``/``pages``/``prompt_len``/``length``/``done``).
+
+    ``eq=False``: requests are identities, not values. The generated
+    field-wise ``__eq__`` made every ``in`` / ``list.remove`` on the hot
+    decode path an O(B·tokens) deep compare of token lists (and two
+    distinct requests with equal prompts compared equal); identity
+    semantics make those O(B) pointer checks and restore hashability."""
 
     sid: int
     tokens: list
@@ -112,13 +118,22 @@ class RequestScheduler:
                  default_max_new: int = 32,
                  swap: KVSwapManager | None = None,
                  stall_preempt_fraction: float | None = None,
-                 stall_preempt_cooldown_s: float = 0.0):
+                 stall_preempt_cooldown_s: float = 0.0,
+                 spec_tokens: int = 0):
         assert prefill_token_budget >= 1
         self.pool = pool
         self.table = pool.table          # logical→physical page table
         self.max_batch = max_batch
         self.prefill_token_budget = prefill_token_budget
         self.swap = swap
+        # speculative-decode lookahead (DESIGN.md §7): every decode step
+        # may write positions [length, length + spec_tokens], so growth
+        # accounting reserves pages for the whole span, admission sizes
+        # footprints with the margin, and the per-step token budget charges
+        # each running sequence's draft+verify tokens (1 + spec_tokens)
+        # before prefill chunks may claim the rest. 0 = plain decode.
+        assert spec_tokens >= 0
+        self.spec_tokens = spec_tokens
         # stall-triggered preemption (Eq. 1): evict a sequence whose own
         # KV read time exceeds this fraction of the batch read time.
         # None disables; the cooldown stops an out/in thrash loop.
@@ -177,7 +192,10 @@ class RequestScheduler:
                     else self.now)
         # reject infeasible requests here — admitting one would let it
         # accumulate pages chunk by chunk until it wedges the whole engine
-        footprint = -(-(r.prefill_target + r.max_new) // self.pool.page_size)
+        # (speculative lookahead pages count: a verify step may transiently
+        # hold spec_tokens positions past the final committed one)
+        footprint = -(-(r.prefill_target + r.max_new + self.spec_tokens)
+                      // self.pool.page_size)
         if footprint > self.allocatable_pages():
             raise ValueError(
                 f"request needs {footprint} KV pages but at most "
@@ -239,17 +257,21 @@ class RequestScheduler:
         return len(self.running) + len(self.prefilling)
 
     def _growth_need(self, seqs) -> int:
-        """Decode pages the next step will allocate for ``seqs``: a fresh
-        page on a page boundary, or a CoW clone when the write position
-        falls inside a *shared* page (the full-prompt-match fork)."""
+        """Decode pages the next step will allocate for ``seqs``."""
+        return sum(self._seq_growth(r.length, r.pages) for r in seqs)
+
+    def _seq_growth(self, length: int, pages) -> int:
+        """Pages one sequence's next decode step may allocate: enough fresh
+        pages to cover the write span ``[length, length + spec_tokens]``
+        (one page per step when speculation is off), plus a CoW clone when
+        the first write position falls inside a *shared* page (the
+        full-prompt-match fork)."""
         ps = self.pool.page_size
-        n = 0
-        for r in seqs:
-            if r.length % ps == 0:
-                n += 1
-            elif r.pages and self.table.shared(r.pages[r.length // ps]):
-                n += 1
-        return n
+        need = max(0, -(-(length + self.spec_tokens + 1) // ps) - len(pages))
+        if length % ps and pages \
+                and self.table.shared(pages[length // ps]):
+            need += 1
+        return need
 
     # -- preemption -----------------------------------------------------------
 
@@ -340,7 +362,6 @@ class RequestScheduler:
     # -- resume ---------------------------------------------------------------
 
     def _swap_ins(self, plan: StepPlan) -> None:
-        ps = self.pool.page_size
         for r in sorted(self.swapped, key=self._order):
             if r in plan.swapped_out:    # no same-step thrash
                 continue
@@ -350,7 +371,7 @@ class RequestScheduler:
                 break
             # only parked pages re-allocate; pinned shared pages never left
             need = (self.swap.parked_count(r.pages)
-                    + (1 if r.length % ps == 0 else 0)
+                    + self._seq_growth(r.length, r.pages)
                     + self._growth_need(self.running))
             if self.pool.free_count() < need:
                 continue
@@ -367,6 +388,16 @@ class RequestScheduler:
     def _plan_prefills(self, plan: StepPlan) -> None:
         ps = self.pool.page_size
         budget = self.prefill_token_budget
+        if self.spec_tokens:
+            # draft+verify accounting: every running sequence's decode this
+            # step is a (1 + spec_tokens)-token forward through the same
+            # batched prefill-mode op prefill chunks use — charge it
+            # against the shared per-step token budget first, so a step's
+            # total forward tokens stay bounded (running sequences always
+            # decode; prefill takes what is left)
+            budget -= len(self.running) * (1 + self.spec_tokens)
+            if budget <= 0:
+                return
         in_flight = sorted(self.prefilling, key=self._order)
         fresh = self._arrived()
         for r in in_flight + fresh:
@@ -391,11 +422,16 @@ class RequestScheduler:
             chunk = min(budget, target - r.length)
             hi = r.length + chunk
             new_pages = -(-hi // ps) - len(r.pages)
-            # reserve the first decode page too when this chunk completes
-            # the prefill on a page boundary, so the sequence can decode
+            # reserve the first decode step's pages too when this chunk
+            # completes the prefill, so the sequence can decode (with
+            # speculation the first verify step may span several pages)
             done_now = hi == target
-            need = (new_pages + self._growth_need(self.running)
-                    + (1 if done_now and target % ps == 0 else 0))
+            first_decode = 0
+            if done_now:
+                first_decode = max(
+                    0, -(-(target + self.spec_tokens + 1) // ps)
+                    - (-(-hi // ps)))
+            need = new_pages + self._growth_need(self.running) + first_decode
             if self.pool.free_count() < need and \
                     not self._reclaim(need, max_level=self.level(r)):
                 continue

@@ -60,6 +60,12 @@ class WorkloadSpec:
     prefix_len: int = 0
     prefix_groups: int = 1
     prefix_frac: float = 1.0
+    # repetition-friendly prompts (any kind): with ``prompt_loop_len > 0``
+    # each prompt body is a random motif of that length tiled to the drawn
+    # prompt length — the templated / copy-heavy structure that makes
+    # n-gram self-drafting (serve/spec.py, DESIGN.md §7) accept at high
+    # rates; 0 keeps fully random bodies
+    prompt_loop_len: int = 0
 
 
 def _interarrivals(spec: WorkloadSpec, rng: np.random.Generator) -> np.ndarray:
@@ -113,8 +119,14 @@ def generate(spec: WorkloadSpec) -> list[TraceRequest]:
         head: tuple[int, ...] = ()
         if prefixes and rng.uniform() < spec.prefix_frac:
             head = prefixes[int(rng.integers(len(prefixes)))]
-        prompt = head + tuple(int(t) for t in
-                              rng.integers(1, spec.vocab_size, int(lens[i])))
+        n = int(lens[i])
+        if spec.prompt_loop_len > 0:
+            motif = rng.integers(1, spec.vocab_size,
+                                 min(spec.prompt_loop_len, n))
+            body = tuple(int(motif[j % len(motif)]) for j in range(n))
+        else:
+            body = tuple(int(t) for t in rng.integers(1, spec.vocab_size, n))
+        prompt = head + body
         out.append(TraceRequest(arrival_s=float(arrivals[i]), prompt=prompt,
                                 max_new=spec.max_new,
                                 cls=names[int(classes[i])]))

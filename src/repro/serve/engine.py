@@ -47,33 +47,71 @@ class PagedDecoder:
         return gp[l]
 
     def prefill_chunk(self, token_ids, pages, lo: int, hi: int):
-        """Incremental chunked prefill: materialize K/V for prompt positions
-        [lo, hi) with O(hi-lo) compute. Per layer the chunk's K/V scatters
-        into its pages first, then the chunk queries run prefill-mode paged
-        attention over the sequence's page table — prior chunks' (and any
-        trie-shared prefix's) K/V is *read from the pool*, never recomputed.
-        Same per-layer algebra as ``decode_step`` with T tokens at once."""
+        """Single-sequence incremental prefill (kept for callers/tests):
+        one-chunk special case of :meth:`forward_chunks`."""
+        self.forward_chunks([(list(token_ids[lo:hi]), pages, lo)])
+
+    def forward_chunks(self, chunks, *, want_logits: bool = False):
+        """Fused multi-sequence chunk forward: ``chunks`` is a list of
+        ``(token_ids, pages, start)`` — one sequence's token chunk at
+        absolute positions ``[start, start + len(token_ids))`` over its page
+        view. Per layer, every chunk's K/V scatters into its pages first
+        (one op for the whole batch), then all chunks' queries run *one*
+        batched prefill-mode paged-attention launch — prior chunks' (and
+        any trie-shared prefix's) K/V is read from the pool, never
+        recomputed, and same-step chunks of different sequences no longer
+        pay one dispatch each (ROADMAP: batched incremental prefill).
+
+        Chunks are right-padded to the longest one; padded queries' K/V
+        never lands in the pool and their outputs are discarded, so real
+        positions are bit-identical to running each chunk alone. With
+        ``want_logits`` the padded [B,T,V] logits are returned — the
+        speculative verify step (DESIGN.md §7) reads the model's argmax at
+        every draft position from them."""
         cfg = self.cfg
         cdt = jnp.dtype(cfg.compute_dtype)
-        t = hi - lo
+        b = len(chunks)
         nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
         ps = self.pool.page_size
-        toks = jnp.asarray([token_ids[lo:hi]], jnp.int32)
-        x = self.params["embed"][toks].astype(cdt)       # [1,T,d]
+        t = max(len(toks) for toks, _, _ in chunks)
+        toks_pad = np.zeros((b, t), np.int32)
+        pos_pad = np.zeros((b, t), np.int32)
+        starts = np.zeros(b, np.int32)
+        mp = max(-(-(start + len(toks)) // ps) for toks, _, start in chunks)
+        tables = np.zeros((b, mp), np.int32)
+        seq_i: list[int] = []      # scatter coordinates of real positions
+        tok_i: list[int] = []
+        pids: list[int] = []
+        slots: list[int] = []
+        for i, (toks, pages, start) in enumerate(chunks):
+            ti = len(toks)
+            toks_pad[i, :ti] = toks
+            pos_pad[i] = start + np.arange(t)
+            starts[i] = start
+            cover = -(-(start + ti) // ps)
+            tables[i, :cover] = pages[:cover]
+            seq_i.extend([i] * ti)
+            tok_i.extend(range(ti))
+            pids.extend(int(pages[p // ps]) for p in range(start, start + ti))
+            slots.extend(p % ps for p in range(start, start + ti))
+        seq_i = np.asarray(seq_i, np.int32)
+        tok_i = np.asarray(tok_i, np.int32)
+        pids = np.asarray(pids, np.int32)
+        slots = np.asarray(slots, np.int32)
+        tbl = jnp.asarray(tables)
+        qs = jnp.asarray(starts)
+
+        x = self.params["embed"][jnp.asarray(toks_pad)].astype(cdt)  # [B,T,d]
         if cfg.embed_scale:
             x = x * np.sqrt(cfg.d_model)
-        pos = jnp.arange(lo, hi, dtype=jnp.int32)[None]  # [1,T]
-        positions = np.arange(lo, hi)
-        pids = np.asarray([pages[p // ps] for p in positions], np.int32)
-        slots = (positions % ps).astype(np.int32)
-        tbl = jnp.asarray(pages[:-(-hi // ps)], jnp.int32)
+        pos = jnp.asarray(pos_pad)                       # [B,T]
 
         for l in range(cfg.num_layers):
             p = self._layer(l)
             h = L.apply_norm(cfg, p["norm1"], x)
-            q = (h @ p["attn"]["wq"].astype(cdt)).reshape(1, t, nq, hd)
-            k = (h @ p["attn"]["wk"].astype(cdt)).reshape(1, t, nkv, hd)
-            v = (h @ p["attn"]["wv"].astype(cdt)).reshape(1, t, nkv, hd)
+            q = (h @ p["attn"]["wq"].astype(cdt)).reshape(b, t, nq, hd)
+            k = (h @ p["attn"]["wk"].astype(cdt)).reshape(b, t, nkv, hd)
+            v = (h @ p["attn"]["wv"].astype(cdt)).reshape(b, t, nkv, hd)
             if cfg.qkv_bias:
                 q = q + p["attn"]["bq"].astype(cdt).reshape(nq, hd)
                 k = k + p["attn"]["bk"].astype(cdt).reshape(nkv, hd)
@@ -81,17 +119,26 @@ class PagedDecoder:
             if cfg.use_rope:
                 q = L.apply_rope(q, pos, cfg.rope_theta)
                 k = L.apply_rope(k, pos, cfg.rope_theta)
-            # chunk K/V lands before attention: the causal mask then covers
-            # prefix and intra-chunk keys uniformly
-            self.pool.k_pool = self.pool.k_pool.at[l, pids, slots].set(k[0])
-            self.pool.v_pool = self.pool.v_pool.at[l, pids, slots].set(v[0])
-            att = paged_ops.paged_prefill_attention(
-                q[0], self.pool.k_pool[l], self.pool.v_pool[l], tbl,
-                jnp.int32(lo), impl="reference")
-            x = x + (att.reshape(1, t, nq * hd)
+            # real positions' K/V lands before attention: the causal mask
+            # then covers prefix and intra-chunk keys uniformly (padded
+            # positions never land)
+            self.pool.k_pool = self.pool.k_pool.at[l, pids, slots].set(
+                k[seq_i, tok_i])
+            self.pool.v_pool = self.pool.v_pool.at[l, pids, slots].set(
+                v[seq_i, tok_i])
+            att = paged_ops.paged_prefill_attention_batch(
+                q, self.pool.k_pool[l], self.pool.v_pool[l], tbl, qs,
+                impl="reference")
+            x = x + (att.reshape(b, t, nq * hd)
                      @ p["attn"]["wo"].astype(cdt))
             h = L.apply_norm(cfg, p["norm2"], x)
             x = x + L.mlp_apply(cfg, p["mlp"], h)
+        if not want_logits:
+            return None
+        x = L.apply_norm(cfg, self.params["final_norm"], x)
+        w = (self.params["embed"].T if cfg.tie_embeddings
+             else self.params["head"])
+        return x @ w.astype(cdt)                         # [B,T,V]
 
     def decode_step(self, tokens, tables, lens, positions):
         """tokens [B,1]; tables [B,MP]; lens [B]; positions [B]."""
@@ -149,7 +196,8 @@ class ServeEngine:
                  scheduler: RequestScheduler | None = None,
                  wall_clock: bool = True, sim_step_s: float = 0.0,
                  incremental_prefill: bool = True,
-                 prefix_reuse: bool = True):
+                 prefix_reuse: bool = True,
+                 drafter=None):
         self.cfg = cfg
         self.pool = pool
         self.table = pool.table
@@ -169,8 +217,19 @@ class ServeEngine:
         # (the footprint baseline benchmarks compare against)
         self.incremental_prefill = incremental_prefill
         self.table.prefix_reuse = prefix_reuse
+        # speculative multi-token decode (DESIGN.md §7): a drafter proposes
+        # continuations, the verify step accepts only what the model's own
+        # argmax confirms — outputs stay token-identical to greedy. The
+        # scheduler must reserve page growth and token budget for the
+        # lookahead, so its spec_tokens tracks the drafter's depth.
+        self.drafter = drafter
+        if drafter is not None:
+            self.scheduler.spec_tokens = max(self.scheduler.spec_tokens,
+                                             drafter.max_tokens)
         self.prefill_tokens_computed = 0   # forward-pass tokens spent on
         self.prefill_chunks_run = 0        # prefill (the O(n) vs O(n²) gap)
+        self.decode_steps = 0              # steps that ran a decode batch
+        self.tokens_emitted = 0            # decode tokens committed
         self.latencies: list[float] = []
 
     # scheduler views under the pre-scheduler attribute names
@@ -194,13 +253,15 @@ class ServeEngine:
 
     # -- chunked prefill ------------------------------------------------------
 
-    def _prefill_chunk(self, seq: Sequence_, lo: int, hi: int):
-        """Materialize K/V for prompt positions [lo, hi). Two paths:
+    def _run_prefills(self, chunks) -> None:
+        """Materialize K/V for this step's prompt chunks. Two paths:
 
-        - **incremental** (default): O(hi-lo) — the chunk reads prior
-          chunks' (and trie-shared prefix) K/V from the pool through the
-          prefill-mode paged-attention op. Long-prompt admission is O(n)
-          across chunks.
+        - **incremental** (default): O(hi-lo) per chunk — each chunk reads
+          prior chunks' (and trie-shared prefix) K/V from the pool through
+          the prefill-mode paged-attention op, and *all* same-step chunks
+          of different sequences fuse into one batched launch
+          (``PagedDecoder.forward_chunks``). Long-prompt admission is O(n)
+          across chunks, and a step's prefill work is one dispatch.
         - **recompute**: forward over ``tokens[:hi]``, scatter [lo, hi) —
           O(hi) per chunk, O(n²) across chunks; kept as the exactness
           oracle (causal attention makes position p's K/V depend only on
@@ -209,19 +270,30 @@ class ServeEngine:
         The last prompt token is never prefilled — the first decode step
         consumes it and writes its K/V at the true position (double-writing
         it shifted the decode RoPE position by one)."""
-        if hi <= lo:
+        chunks = [(s, lo, hi) for s, lo, hi in chunks if hi > lo]
+        if not chunks:
             return
-        # defensive CoW: prefill chunks land in freshly-allocated exclusive
-        # pages, but a fork here is what keeps a mis-planned write from
-        # corrupting another sequence's shared prefix
-        self.table.ensure_writable(seq.pages, lo, hi)
-        self.prefill_chunks_run += 1
-        if self.incremental_prefill:
+        if not self.incremental_prefill:
+            for seq, lo, hi in chunks:
+                self._prefill_chunk_recompute(seq, lo, hi)
+            return
+        fused = []
+        for seq, lo, hi in chunks:
+            # defensive CoW: prefill chunks land in freshly-allocated
+            # exclusive pages, but a fork here is what keeps a mis-planned
+            # write from corrupting another sequence's shared prefix
+            self.table.ensure_writable(seq.pages, lo, hi)
+            self.prefill_chunks_run += 1
             self.prefill_tokens_computed += hi - lo
-            self.decoder.prefill_chunk(seq.tokens, seq.pages, lo, hi)
+            fused.append((seq.tokens[lo:hi], seq.pages, lo))
+        self.decoder.forward_chunks(fused)
+        for seq, lo, hi in chunks:
             seq.length = hi
             self._register_if_done(seq, hi)
-            return
+
+    def _prefill_chunk_recompute(self, seq: Sequence_, lo: int, hi: int):
+        self.table.ensure_writable(seq.pages, lo, hi)
+        self.prefill_chunks_run += 1
         self.prefill_tokens_computed += hi
         ps = self.pool.page_size
         toks = jnp.asarray([seq.tokens[:hi]], jnp.int32)
@@ -255,36 +327,21 @@ class ServeEngine:
     def step(self) -> dict:
         t0 = time.monotonic()
         plan = self.scheduler.schedule()
-        for seq, lo, hi in plan.prefill_chunks:
-            self._prefill_chunk(seq, lo, hi)
+        self._run_prefills(plan.prefill_chunks)
         batch = plan.batch
         if not batch and not plan.prefill_chunks:
             self.scheduler.advance(plan.swap_seconds)
             return {"active": 0, "pending": len(self.scheduler.pending)}
-        ps = self.pool.page_size
         done: list[Sequence_] = []
+        produced_before = {s.sid: s.produced for s in batch}
         if batch:
-            # grow pages where needed (the scheduler reserved capacity);
-            # a decode write into a shared page — the full-prompt-match
-            # case: position prompt_len-1 lives in a trie page — forks it
+            drafts = self._draft(batch)
+            if drafts is not None:
+                self._verify_step(batch, drafts)
+            else:
+                self._greedy_step(batch)
+            self.decode_steps += 1
             for s in batch:
-                if s.length % ps == 0:
-                    self.table.append_page(s.pages)
-                else:
-                    self.table.fork_for_write(s.pages, s.length // ps)
-            mp = max(len(s.pages) for s in batch)
-            tables = np.zeros((len(batch), mp), np.int32)
-            for i, s in enumerate(batch):
-                tables[i, :len(s.pages)] = s.pages
-            lens = np.asarray([s.length for s in batch], np.int32)
-            toks = np.asarray([[s.tokens[-1]] for s in batch], np.int32)
-            logits = self.decoder.decode_step(
-                jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(lens),
-                jnp.asarray(lens))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for s, t in zip(batch, nxt):
-                s.tokens.append(int(t))
-                s.length += 1      # the decoded token's K/V is now pooled
                 if s.produced >= s.max_new:
                     done.append(s)
 
@@ -292,15 +349,23 @@ class ServeEngine:
         # latency signal = wall clock + analytic BWAP read time + swap
         # transfer time (the CPU has no real memory-domain asymmetry;
         # the Eq.-1 model supplies it); prefill-only steps read no KV, and
-        # sampling them would dilute the per-domain stall rings with zeros
-        sim = max(self.pool.expected_read_time(
-            [p for s in batch if s not in done for p in s.pages]), 0.0) \
+        # sampling them would dilute the per-domain stall rings with zeros.
+        # The read set is every *physical* page the decode batch gathered:
+        # finishing sequences' pages count (the step that produced their
+        # final token read them — dropping them fed the DWP tuner an
+        # underestimated stall signal on every completing step), and a trie
+        # page shared by several holders is billed once, not once per
+        # holder (Eq. 1 models resident bytes, and the kernel reads each
+        # physical page once per launch).
+        read_pages = list(dict.fromkeys(
+            p for s in batch for p in s.pages)) if batch else []
+        sim = max(self.pool.expected_read_time(read_pages), 0.0) \
             if batch else 0.0
         dt = ((wall if self.wall_clock else 0.0) + sim + plan.swap_seconds
               + (self.sim_step_s if batch else 0.0))
         self.scheduler.advance(dt)
         for s in batch:
-            if s.produced == 1:
+            if produced_before[s.sid] == 0 and s.produced > 0:
                 self.scheduler.notice_first_token(s)
         for s in done:
             self.scheduler.finish(s)
@@ -330,7 +395,148 @@ class ServeEngine:
                 # the page-table block via telemetry.attach_pagetable
                 "pagetable": tel.get("pagetable", self.table.stats()),
                 "prefill_tokens_computed": self.prefill_tokens_computed,
+                "decode_steps": self.decode_steps,
+                "tokens_emitted": self.tokens_emitted,
+                "spec": tel["spec"],
                 "telemetry": tel}
+
+    # -- decode: greedy single-token and speculative multi-token --------------
+
+    def _draft(self, batch) -> list[list[int]] | None:
+        """Ask the drafter for each sequence's proposal, capped at the
+        scheduler's reserved lookahead and the sequence's remaining token
+        allowance (drafting past ``max_new`` would be rolled back anyway).
+        Returns None when there is nothing to verify — the plain decode
+        kernel is cheaper than a 1-token verify launch."""
+        if self.drafter is None:
+            return None
+        k = self.scheduler.spec_tokens
+        drafts = []
+        for s in batch:
+            allowed = s.max_new - s.produced     # >= 1: finished seqs left
+            d = self.drafter.draft(s.tokens)[:min(k, allowed - 1)] \
+                if allowed > 1 else []
+            drafts.append([int(t) for t in d])
+        return drafts if any(drafts) else None
+
+    def _greedy_step(self, batch) -> None:
+        ps = self.pool.page_size
+        # grow pages where needed (the scheduler reserved capacity);
+        # a decode write into a shared page — the full-prompt-match
+        # case: position prompt_len-1 lives in a trie page — forks it
+        for s in batch:
+            if s.length % ps == 0:
+                self.table.append_page(s.pages)
+            else:
+                self.table.fork_for_write(s.pages, s.length // ps)
+        mp = max(len(s.pages) for s in batch)
+        tables = np.zeros((len(batch), mp), np.int32)
+        for i, s in enumerate(batch):
+            tables[i, :len(s.pages)] = s.pages
+        lens = np.asarray([s.length for s in batch], np.int32)
+        toks = np.asarray([[s.tokens[-1]] for s in batch], np.int32)
+        logits = self.decoder.decode_step(
+            jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(lens),
+            jnp.asarray(lens))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s, t in zip(batch, nxt):
+            s.tokens.append(int(t))
+            s.length += 1          # the decoded token's K/V is now pooled
+        self.tokens_emitted += len(batch)
+
+    def _verify_step(self, batch, drafts) -> None:
+        """Speculative multi-token decode (DESIGN.md §7). Per sequence the
+        chunk ``[tokens[-1], draft...]`` writes K/V at positions
+        ``[length, length + d]`` and runs through one batched prefill-mode
+        attention launch; the longest draft prefix the model's own argmax
+        confirms is accepted, plus one bonus token from the first
+        disagreeing position — so every verify step emits >= 1 token and
+        outputs are token-identical to greedy decoding.
+
+        Rejected speculation rolls back *exactly*: snapshotted K/V bytes
+        are scattered back, pages greedy would not yet have allocated
+        return to the allocator LIFO with the allocation cycle rewound
+        (``pool.undo_alloc``), and their references leave the table
+        (``table.pop_page``). The unwind runs in **reverse batch order** —
+        the step's allocations form one stack across sequences, so only a
+        right-to-left unwind restores free-list order and lets the cycle
+        rewinds chain. A single speculating sequence is then bit-identical
+        to its greedy run (``tests/test_spec_decode.py`` drives this
+        property); with several sequences speculating past page boundaries
+        in one step, a kept page allocated between two rejected ones pins
+        the cycle, so page *ids* may permute across sequences vs greedy —
+        tokens, refcount structure, and leak-freedom still hold exactly
+        (DESIGN.md §7.3). CoW forks never need undoing: the only forkable
+        write position is ``length`` (the committed token — draft
+        positions land in the forked clone or in fresh pages), and at
+        least one token always commits."""
+        ps = self.pool.page_size
+        recs = []                       # per seq: (appended allocs, snap base)
+        chunks = []
+        snap_pids: list[int] = []
+        snap_slots: list[int] = []
+        for s, d in zip(batch, drafts):
+            lo = s.length
+            if lo % ps:
+                self.table.fork_for_write(s.pages, lo // ps)
+            appended = []               # (pid, marker_before, marker_after)
+            while len(s.pages) * ps <= lo + len(d):
+                m0 = self.pool.alloc_marker()
+                pid = self.table.append_page(s.pages)
+                appended.append((pid, m0, self.pool.alloc_marker()))
+            base = len(snap_pids)
+            for p in range(lo + 1, lo + len(d) + 1):   # speculative slots
+                snap_pids.append(int(s.pages[p // ps]))
+                snap_slots.append(p % ps)
+            recs.append((appended, base))
+            chunks.append(([s.tokens[-1]] + d, s.pages, lo))
+        snap_k = snap_v = None
+        if snap_pids:
+            # pre-write bytes of every speculative slot, all layers at once
+            snap_k = self.pool.k_pool[:, snap_pids, snap_slots]
+            snap_v = self.pool.v_pool[:, snap_pids, snap_slots]
+        logits = self.decoder.forward_chunks(chunks, want_logits=True)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))   # [B,T]
+        drafted = accepted = emitted = 0
+        rest_idx: list[int] = []        # snapshot rows to scatter back
+        rest_pids: list[int] = []
+        rest_slots: list[int] = []
+        for i, (s, d) in enumerate(zip(batch, drafts)):
+            lo = s.length
+            allowed = s.max_new - s.produced
+            a = 0
+            while a < len(d) and a + 1 < allowed and int(nxt[i, a]) == d[a]:
+                a += 1
+            emit = a + 1                # accepted drafts + the bonus token
+            s.tokens.extend(int(nxt[i, j]) for j in range(emit))
+            s.length = lo + emit        # committed K/V: positions lo..lo+a
+            drafted += len(d)
+            accepted += a
+            emitted += emit
+            appended, base = recs[i]
+            for j in range(emit, len(d) + 1):   # rejected: lo+emit..lo+d
+                rest_idx.append(base + j - 1)
+                rest_pids.append(snap_pids[base + j - 1])
+                rest_slots.append(snap_slots[base + j - 1])
+        # unwind rejected page allocations strictly right-to-left: the
+        # step's allocations are one stack across the whole batch, so only
+        # reverse order puts pages back in LIFO position and keeps each
+        # undo_alloc's cycle-marker check satisfied for the next one
+        for s, (appended, _) in zip(reversed(batch), reversed(recs)):
+            keep = -(-s.length // ps)   # pages greedy would hold right now
+            while len(s.pages) > keep:
+                pid, m0, m1 = appended.pop()
+                popped = self.table.pop_page(s.pages)
+                assert popped == pid, "speculative page stack out of order"
+                self.pool.undo_alloc(pid, m0, m1)
+        if rest_idx:
+            idx = np.asarray(rest_idx)
+            self.pool.k_pool = self.pool.k_pool.at[
+                :, rest_pids, rest_slots].set(snap_k[:, idx])
+            self.pool.v_pool = self.pool.v_pool.at[
+                :, rest_pids, rest_slots].set(snap_v[:, idx])
+        self.tokens_emitted += emitted
+        self.pool.telemetry.record_spec(drafted, accepted, emitted)
 
     def remap_pages(self, id_map: np.ndarray) -> None:
         """Rewrite page tables after the pool was rebalanced (arbiter

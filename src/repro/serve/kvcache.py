@@ -168,6 +168,28 @@ class BwapPagePool:
             self.free[dom].append(int(pid))
             self.telemetry.record_free(dom)
 
+    # -- speculative allocation rollback --------------------------------------
+
+    def alloc_marker(self) -> int:
+        """Opaque allocation-cycle position; bracket a speculative
+        ``alloc_page`` with markers to make it undoable (``undo_alloc``)."""
+        return self._cycle_pos
+
+    def undo_alloc(self, pid: int, marker_before: int,
+                   marker_after: int) -> None:
+        """Return a speculatively-allocated page as if the allocation never
+        happened: the page goes back on *top* of its free list (LIFO — the
+        next alloc re-issues the same id), and when no allocation happened
+        since (``marker_after`` is still current) the weighted allocation
+        cycle rewinds too, so future placement matches a run that never
+        allocated. The telemetry alloc count reverts rather than logging a
+        free — rejected speculation is not page churn."""
+        dom = self.domain_of(pid)
+        self.free[dom].append(int(pid))
+        if self._cycle_pos == marker_after:
+            self._cycle_pos = marker_before
+        self.telemetry.record_alloc(dom, -1)
+
     def reserve_pages(self, domain: int, n: int) -> list[int]:
         """Take ``n`` free pages out of ``domain``'s free list without
         counting them as allocations: the scheduler's swap manager holds

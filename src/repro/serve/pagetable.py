@@ -95,6 +95,19 @@ class PageTable:
         for _ in range(n):
             self.append_page(view)
 
+    def pop_page(self, view: list) -> int:
+        """Undo the most recent ``append_page`` on this view (speculative
+        rollback): drops the reference and returns the id so the caller can
+        hand it back to the allocator (``pool.undo_alloc`` — *not*
+        ``free_pages``, which would log churn and reorder the free list).
+        Only valid for exclusive, trie-unregistered pages — which freshly
+        appended decode pages always are."""
+        pid = view.pop()
+        n = self.ref.pop(pid)
+        assert n == 1, "cannot pop a shared page"
+        assert pid not in self._node_of, "cannot pop a registered page"
+        return pid
+
     def release(self, view: Sequence[int]) -> None:
         """Drop one reference per page; free pages nobody holds anymore."""
         dead: list[int] = []

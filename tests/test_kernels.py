@@ -121,3 +121,57 @@ def test_paged_property_random_tables(b, mp, seed):
                               jnp.asarray(lens))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=3e-5, atol=3e-5)
+
+
+# -- batched prefill-mode paged attention (speculative verify / fused prefill)
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,nq,nkv,h,ps,mp,pool", [
+    (1, 4, 4, 2, 64, 8, 3, 16),      # single sequence, GQA
+    (3, 5, 4, 2, 32, 4, 6, 24),      # batch with different q_starts
+    (2, 1, 8, 8, 32, 8, 4, 16),      # T=1 degenerate (pure decode shape)
+])
+def test_paged_prefill_batch_matches_ref(b, t, nq, nkv, h, ps, mp, pool,
+                                         dtype):
+    rng = np.random.default_rng(b * 11 + t)
+    q = _rand(12, (b, t, nq, h), dtype)
+    k_pool = _rand(13, (pool, ps, nkv, h), dtype)
+    v_pool = _rand(14, (pool, ps, nkv, h), dtype)
+    table = np.stack([rng.choice(pool, mp, replace=False)
+                      for _ in range(b)]).astype(np.int32)
+    q_start = rng.integers(0, mp * ps - t + 1, b).astype(np.int32)
+    out = paged_ops.paged_prefill_attention_batch(
+        q, k_pool, v_pool, jnp.asarray(table), jnp.asarray(q_start),
+        interpret=True)
+    ref = paged_ops.paged_prefill_attention_batch(
+        q, k_pool, v_pool, jnp.asarray(table), jnp.asarray(q_start),
+        impl="reference")
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_prefill_batch_trailing_page_invariance():
+    """The rollback bit-identity property (DESIGN.md §7): extending a page
+    table with lookahead pages whose keys are causally masked must not
+    change the result in the last bit — the online-softmax page walk makes
+    a fully-masked page an exact no-op."""
+    nq, nkv, h, ps, pool = 4, 2, 32, 4, 16
+    q = _rand(15, (1, 3, nq, h), jnp.float32)
+    k_pool = _rand(16, (pool, ps, nkv, h), jnp.float32)
+    v_pool = _rand(17, (pool, ps, nkv, h), jnp.float32)
+    tbl = jnp.asarray([[5, 9, 2]], jnp.int32)           # covers 12 positions
+    ext = jnp.asarray([[5, 9, 2, 7, 11]], jnp.int32)    # + lookahead pages
+    qs = jnp.asarray([9], jnp.int32)                    # queries at 9..11
+    base = paged_ops.paged_prefill_attention_batch(q, k_pool, v_pool, tbl,
+                                                   qs, impl="reference")
+    wide = paged_ops.paged_prefill_attention_batch(q, k_pool, v_pool, ext,
+                                                   qs, impl="reference")
+    assert (np.asarray(base) == np.asarray(wide)).all()
+    # decode op agrees bitwise with verify row 0 (token-identity under the
+    # scheduler relies on the two paths computing the same attention)
+    dec = paged_ops.paged_attention(q[:, 0], k_pool, v_pool, tbl,
+                                    jnp.asarray([10], jnp.int32),
+                                    impl="reference")
+    assert (np.asarray(dec[0]) == np.asarray(base[0, 0])).all()
