@@ -125,6 +125,13 @@ def main() -> None:
     _hdr("Prefix sharing — peak KV footprint, reuse on vs off")
     scheduler_bench.prefix_compare(seed=args.seed, check=False)
 
+    _hdr("Memory fabric — cross-tenant prefix tier + swap loans vs "
+         "isolated partitions")
+    # check=False: the sweep accepts arbitrary --seed values; the hard
+    # >=1.2x best-effort-goodput gate runs on the benchmark's own (CI)
+    # entry point. Emits BENCH_fabric.json.
+    scheduler_bench.fabric_compare(seed=args.seed, check=False)
+
     _hdr("Speculative decode — steps saved vs greedy (token-identical)")
     from benchmarks import serve_bench
     # check=False: the sweep accepts arbitrary --seed values; the hard

@@ -1,14 +1,23 @@
-"""Unified placement runtime (DESIGN.md §3).
+"""Unified placement runtime (DESIGN.md §3, §8).
 
+- ``fabric``: the memory-fabric API — one surface (``MemoryFabric`` +
+  tenant-scoped ``FabricView``) owning domains, the physical pool, the
+  logical page table, reservation/loan ledgers, and the placement event
+  bus. The only placement API the serve/scheduler layers touch.
+- ``pool``: the physical page pool (arrays, free lists, executor hooks).
+- ``pagetable``: refcounted logical→physical views, prefix trie, CoW.
 - ``policy``: registry of placement policies (uniform, bwap_canonical,
   bwap_dwp, local_first) behind one protocol.
 - ``executor``: batched gather/scatter migration of page pools.
-- ``arbiter``: multi-tenant partitioning + co-scheduled DWP tuning.
+- ``arbiter``: multi-tenant quota partitioning + co-scheduled DWP tuning +
+  cross-tenant loan/prefix brokering over one fabric.
 - ``telemetry``: per-domain counters and ring-buffer samples.
 """
 
 from repro.placement import policy
 from repro.placement.executor import MigrationExecutor, MigrationResult
+from repro.placement.fabric import (FabricView, MemoryFabric, SlotLoan,
+                                    as_view)
 from repro.placement.telemetry import DomainTelemetry, Ring
 
 __all__ = [
@@ -17,4 +26,8 @@ __all__ = [
     "MigrationResult",
     "DomainTelemetry",
     "Ring",
+    "MemoryFabric",
+    "FabricView",
+    "SlotLoan",
+    "as_view",
 ]

@@ -1,12 +1,21 @@
 """Multi-tenant domain arbiter (paper §III-B3 as a runtime service).
 
 Several co-located applications share one machine's memory domains. The
-arbiter owns the capacity ledger: it partitions every domain's pages among
-registered tenants, assigns each tenant a disjoint *home* (worker) domain by
-priority (high-priority tenants claim the fastest unclaimed domain), builds
-each tenant's :class:`BwapPagePool`, and rebalances capacity when tenants
-join or leave (live pools are rebuilt through the batched migration
-executor; engines get an id map to rewrite their page tables).
+arbiter is the *policy brain* over one :class:`~repro.placement.fabric.
+MemoryFabric`: it partitions every domain's pages among registered tenants
+as fabric-view quotas, assigns each tenant a disjoint *home* (worker) domain
+by priority (high-priority tenants claim the fastest unclaimed domain), and
+redistributes quota when tenants join or leave — pure ledger arithmetic on
+the shared pool, no array rebuilds, no page-id remapping (the rebalance
+copies and ``attach_engine`` back-channels of the pre-fabric design are
+gone; engines find their priority class and co-tuning through their view).
+
+Because every tenant's view shares the fabric's physical pool and prefix
+trie, the arbiter also brokers the two cross-tenant resources the fabric
+exists for: the **read-only prefix tier** (same-model tenants opt in via
+``share_prefix`` and their prompt pages physically dedupe across views) and
+**swap-slot loans** (idle reservations of one tenant absorb another's burst
+through the fabric's loan ledger).
 
 Best-effort tenants are tuned by the paper's two-stage
 :class:`CoScheduledTuner`: stage 1 raises the tenant's DWP while the
@@ -14,7 +23,10 @@ high-priority tenants' latency stream keeps improving (pulling the tenant's
 pages out of the high-priority home domains), freezing a lower bound when it
 stabilises; stage 2 hill-climbs the tenant's own latency, never dropping
 below the bound. ``observe()`` is the single entry point — feed it each
-tenant's per-step latency and the arbiter routes the streams.
+tenant's per-step latency and the arbiter routes the streams; cycle moves
+re-home live sequences through the view's assignment-change subscription
+(the scheduler registers itself — the dependency points serve → placement,
+never the reverse).
 """
 
 from __future__ import annotations
@@ -27,9 +39,9 @@ import numpy as np
 
 from repro.core import interleave
 from repro.core.dwp import CoScheduledTuner, DWPConfig
-from repro.placement import policy as placement_policy
-from repro.placement.telemetry import DomainTelemetry, Ring
-from repro.serve.kvcache import BwapPagePool, MemoryDomain
+from repro.placement.fabric import FabricView, MemoryFabric
+from repro.placement.pool import MemoryDomain
+from repro.placement.telemetry import Ring
 
 
 class Priority(enum.Enum):
@@ -53,18 +65,17 @@ class Tenant:
     share: float
     quotas: np.ndarray                 # pages per domain owned by this tenant
     home: tuple[int, ...]              # worker-domain indices
-    pool: BwapPagePool
+    view: FabricView
     cotuner: CoScheduledTuner | None = None
-    engine: object | None = None       # anything with .remap_pages/.active
     latency: Ring = dataclasses.field(default_factory=lambda: Ring(64))
 
     @property
     def dwp(self) -> float:
-        return float(self.pool.tuner.dwp)
+        return self.view.dwp
 
 
 class DomainArbiter:
-    """Capacity ledger + tuner router for N tenants over shared domains."""
+    """Quota ledger + tuner router for N tenants over one shared fabric."""
 
     def __init__(self, specs: Sequence[DomainSpec], page_size: int = 8,
                  seed: int = 0):
@@ -76,6 +87,8 @@ class DomainArbiter:
         self.bw = np.asarray([s.read_bw for s in self.specs])
         self.tenants: dict[str, Tenant] = {}
         self._claimed_homes: set[int] = set()
+        self.fabric: MemoryFabric | None = None
+        self._cfg = None
 
     # -- registration --------------------------------------------------------
 
@@ -87,12 +100,36 @@ class DomainArbiter:
                 return int(d)
         raise RuntimeError("more tenants than domains: no free home domain")
 
+    def _ensure_fabric(self, cfg) -> MemoryFabric:
+        if self.fabric is None:
+            fastest = int(np.argmax(self.bw))
+            domains = [MemoryDomain(s.name, s.total_pages, s.read_bw,
+                                    i == fastest)
+                       for i, s in enumerate(self.specs)]
+            self.fabric = MemoryFabric(cfg, domains,
+                                       page_size=self.page_size,
+                                       seed=self.seed)
+            self._cfg = cfg
+        else:
+            assert cfg is self._cfg or cfg == self._cfg, (
+                "one fabric serves one model group: tenants of a different "
+                "model need their own arbiter/fabric (physical page sharing "
+                "requires identical K/V geometry)")
+        return self.fabric
+
+    #: tenant priority -> scheduler class level (HIGH preempts best-effort)
+    PRIORITY_LEVELS = {Priority.HIGH: 10, Priority.BEST_EFFORT: 0}
+
     def register(self, name: str, cfg, *, priority: Priority,
-                 share: float, dwp_config: DWPConfig | None = None) -> Tenant:
-        """Carve ``share`` of every domain's remaining pages for a new
-        tenant and build its pool (and co-scheduled tuner if best-effort)."""
+                 share: float, dwp_config: DWPConfig | None = None,
+                 share_prefix: bool = True) -> Tenant:
+        """Carve ``share`` of every domain's remaining pages as a new
+        tenant's view quota (and build its co-scheduled tuner if
+        best-effort). ``share_prefix=False`` keeps the tenant out of the
+        cross-tenant read-only prefix tier."""
         assert name not in self.tenants, f"tenant {name!r} already registered"
         assert 0.0 < share <= 1.0
+        fabric = self._ensure_fabric(cfg)
         totals = np.asarray([s.total_pages for s in self.specs])
         quotas = np.minimum(np.floor(totals * share).astype(np.int64),
                             self.free)
@@ -100,9 +137,6 @@ class DomainArbiter:
             raise RuntimeError("no capacity left for tenant " + name)
         home = self._pick_home(priority)
         self._claimed_homes.add(home)
-        domains = [MemoryDomain(s.name, int(q), s.read_bw, i == home)
-                   for i, (s, q) in enumerate(zip(self.specs, quotas))]
-        telemetry = DomainTelemetry([d.name for d in domains])
         cotuner = None
         if priority is Priority.BEST_EFFORT:
             canonical = interleave.normalize(self.bw)
@@ -110,66 +144,45 @@ class DomainArbiter:
                 canonical, [home], num_pages=4096,
                 config=dwp_config or DWPConfig(n=4, c=1,
                                                rel_tolerance=0.02),
-                on_migrate=lambda plan: telemetry.record_plan(plan.num_moves))
-        pool = BwapPagePool(cfg, domains, page_size=self.page_size,
-                            dwp_config=dwp_config, seed=self.seed,
-                            tuner=cotuner, telemetry=telemetry)
+                on_migrate=lambda plan: fabric.telemetry.record_plan(
+                    plan.num_moves))
+        view = fabric.view(name, quota=quotas, home=(home,),
+                           level=self.PRIORITY_LEVELS[priority],
+                           share_prefix=share_prefix, tuner=cotuner,
+                           dwp_config=dwp_config)
         tenant = Tenant(name=name, priority=priority, share=share,
-                        quotas=quotas, home=(home,), pool=pool,
+                        quotas=quotas, home=(home,), view=view,
                         cotuner=cotuner)
         self.free -= quotas
         self.tenants[name] = tenant
         return tenant
 
-    #: tenant priority -> scheduler class level (HIGH preempts best-effort)
-    PRIORITY_LEVELS = {Priority.HIGH: 10, Priority.BEST_EFFORT: 0}
-
-    def attach_engine(self, name: str, engine) -> None:
-        """Wire a tenant's serving engine in. When the engine runs a request
-        scheduler, the tenant is registered as a priority class at the level
-        of its arbiter priority and becomes the engine's default class — so
-        multi-tenant co-scheduling (capacity + DWP) and per-tenant
-        preemption (batch slots + KV swap) compose end-to-end."""
-        t = self.tenants[name]
-        t.engine = engine
-        sched = getattr(engine, "scheduler", None)
-        if sched is not None:
-            from repro.scheduler.scheduler import PriorityClass
-            from repro.scheduler.slo import SloSpec
-            existing = sched.classes.get(name)
-            sched.ensure_class(PriorityClass(
-                name=name, level=self.PRIORITY_LEVELS[t.priority],
-                # arbiter owns the level; SLO deadlines stay whatever the
-                # operator configured on the scheduler (if anything)
-                slo=existing.slo if existing is not None else SloSpec()))
-            sched.default_class = name
-
     def unregister(self, name: str) -> dict[str, np.ndarray]:
-        """Release a tenant's capacity and grow the remaining tenants' pools
-        proportionally to their shares (live pages carried over via one
-        batched copy per pool; attached engines get their tables remapped).
-        Returns the per-tenant page grants."""
+        """Release a tenant's quota and grow the remaining tenants'
+        views proportionally to their shares. Pure ledger arithmetic on
+        the shared pool: no live page moves, no id remapping — pages the
+        leaving tenant shared into the prefix tier survive under their
+        surviving holders. Returns the per-tenant page grants."""
         gone = self.tenants.pop(name)
         self._claimed_homes.discard(gone.home[0])
-        self.free += gone.quotas
+        released = self.fabric.unregister(name)
+        self.free += released
         grants: dict[str, np.ndarray] = {}
         rest = list(self.tenants.values())
         if not rest:
             return grants
         total_share = sum(t.share for t in rest)
-        remaining = gone.quotas.copy()
+        remaining = released.copy()
         for i, t in enumerate(rest):
             if i == len(rest) - 1:                    # remainder to the last
                 grant = remaining.copy()
             else:
                 grant = np.minimum(
-                    np.floor(gone.quotas * (t.share / total_share)).astype(
+                    np.floor(released * (t.share / total_share)).astype(
                         np.int64),
                     remaining)
             remaining -= grant
-            id_map = t.pool.rebalance(t.quotas + grant)
-            if t.engine is not None:
-                t.engine.remap_pages(id_map)
+            t.view.quota += grant
             t.quotas = t.quotas + grant
             self.free -= grant
             grants[t.name] = grant
@@ -181,11 +194,12 @@ class DomainArbiter:
         """Feed one tenant's per-step latency sample. For best-effort
         tenants this drives the two-stage co-scheduled search: stall_a is
         the freshest high-priority latency, stall_b the tenant's own. When
-        the tuner moves the allocation cycle, live sequences of an attached
-        engine are migrated (batched) and True is returned."""
+        the tuner moves the allocation cycle, the view's assignment-change
+        subscribers (the tenant's scheduler) re-home live sequences and
+        True is returned."""
         t = self.tenants[name]
         t.latency.push(latency)
-        # (not pushed into pool telemetry: the engine already records its
+        # (not pushed into fabric telemetry: the engine already records its
         # wall+sim latency there; mixing in this analytic stream would
         # average incommensurate quantities)
         if t.priority is not Priority.BEST_EFFORT or t.cotuner is None:
@@ -193,13 +207,7 @@ class DomainArbiter:
         high = [o.latency.last() for o in self.tenants.values()
                 if o.priority is Priority.HIGH and len(o.latency)]
         stall_a = float(np.mean(high)) if high else 0.0
-        before = t.cotuner.assignment.copy()
-        t.cotuner.record(stall_a, latency)
-        changed = not np.array_equal(before, t.cotuner.assignment)
-        if changed and t.engine is not None:
-            for s in getattr(t.engine, "active", []):
-                s.pages = t.pool.migrate_sequence(s.pages)
-        return changed
+        return t.view.drive_cotuner(stall_a, latency)
 
     # -- interference model --------------------------------------------------
 
@@ -215,9 +223,16 @@ class DomainArbiter:
             for o in self.tenants.values():
                 if o.name == name:
                     continue
-                pages = int(o.pool.used_pages()[d])
-                total += pages * o.pool.page_bytes / (self.bw[d] * 1e9)
+                pages = int(o.view.used_pages()[d])
+                total += pages * o.view.page_bytes / (self.bw[d] * 1e9)
         return scale * total
+
+    # -- cross-tenant loans (delegated to the fabric broker) ------------------
+
+    def loan_stats(self) -> list[dict]:
+        if self.fabric is None:
+            return []
+        return self.fabric.stats()["loans"]
 
     # -- reporting ------------------------------------------------------------
 
@@ -230,10 +245,15 @@ class DomainArbiter:
                 "quota_pages": int(t.quotas.sum()),
                 "dwp": t.dwp,
                 "latency_mean_s": t.latency.mean(),
-                "occupancy": t.pool.occupancy(),
+                "occupancy": t.view.occupancy(),
             }
             if t.cotuner is not None:
                 entry["stage"] = t.cotuner.stage
                 entry["dwp_lower_bound"] = t.cotuner.dwp_lower_bound
             out[t.name] = entry
+        if self.fabric is not None:
+            out["_fabric"] = {
+                "cross_shared_pages": self.fabric.cross_shared_pages(),
+                "loans": self.fabric.stats()["loans"],
+            }
         return out

@@ -119,7 +119,6 @@ class DomainTelemetry:
         self.spec_accepted = 0       # draft tokens accepted
         self.spec_emitted = 0        # tokens emitted by verify steps
         self.slo: ClassSloCounters | None = None
-        self._pagetable_stats = None  # callable -> dict (serve.pagetable)
 
     # -- event hooks --------------------------------------------------------
 
@@ -172,11 +171,6 @@ class DomainTelemetry:
             self.slo = ClassSloCounters()
         return self.slo
 
-    def attach_pagetable(self, stats_fn) -> None:
-        """Register the page table's ``stats`` callable so snapshots carry
-        sharing state (shared/unique pages, CoW faults, prefix hits)."""
-        self._pagetable_stats = stats_fn
-
     # -- reporting ----------------------------------------------------------
 
     @property
@@ -217,6 +211,4 @@ class DomainTelemetry:
         }
         if self.slo is not None:
             out["slo"] = self.slo.snapshot()
-        if self._pagetable_stats is not None:
-            out["pagetable"] = self._pagetable_stats()
         return out

@@ -34,7 +34,7 @@ import enum
 import itertools
 from typing import Sequence
 
-from repro.core import bwmodel
+from repro.placement.fabric import as_view
 from repro.scheduler.slo import SloSpec, SloTracker
 from repro.scheduler.swap import KVSwapManager
 
@@ -104,7 +104,13 @@ class StepPlan:
 
 
 class RequestScheduler:
-    """Priority continuous batching over one ``BwapPagePool``.
+    """Priority continuous batching over one fabric view (a bare
+    ``BwapPagePool`` is adopted into a single-view fabric; placement and
+    page lifetime go exclusively through :class:`FabricView`).
+
+    On a named (multi-tenant) view the scheduler registers the tenant as a
+    priority class at the view's level and makes it the default class — the
+    wiring ``arbiter.attach_engine`` used to reach in and do.
 
     ``swap=None`` disables preemption (the pre-scheduler engine behavior):
     capacity shortfalls make requests wait, and a batch that can no longer
@@ -119,10 +125,10 @@ class RequestScheduler:
                  swap: KVSwapManager | None = None,
                  stall_preempt_fraction: float | None = None,
                  stall_preempt_cooldown_s: float = 0.0,
-                 spec_tokens: int = 0):
+                 spec_tokens: int = 0,
+                 conservative_admission: bool = False):
         assert prefill_token_budget >= 1
-        self.pool = pool
-        self.table = pool.table          # logical→physical page table
+        self.view = as_view(pool)        # the only placement surface
         self.max_batch = max_batch
         self.prefill_token_budget = prefill_token_budget
         self.swap = swap
@@ -134,6 +140,14 @@ class RequestScheduler:
         # before prefill chunks may claim the rest. 0 = plain decode.
         assert spec_tokens >= 0
         self.spec_tokens = spec_tokens
+        # conservative (trie-aware) admission: a request joins the batch
+        # only when its whole remaining *physical* footprint — worst case
+        # minus pages it already shares through the prefix trie — fits
+        # alongside every admitted request's remaining footprint. The
+        # admitted set can then always grow to completion without swap
+        # capacity, at the cost of lower oversubscription; the default
+        # keeps the greedy admission that leans on preemption.
+        self.conservative_admission = conservative_admission
         # stall-triggered preemption (Eq. 1): evict a sequence whose own
         # KV read time exceeds this fraction of the batch read time.
         # None disables; the cooldown stops an out/in thrash loop.
@@ -150,7 +164,19 @@ class RequestScheduler:
         self.default_max_new = default_max_new
         self.slo = SloTracker(
             {n: pc.slo for n, pc in self.classes.items()},
-            counters=pool.telemetry.attach_slo())
+            counters=self.view.attach_slo())
+        if not self.view._adopted:
+            # multi-tenant fabric: the tenant is a priority class at its
+            # view's level and the default class; operator-configured SLO
+            # deadlines (a pre-declared class of the same name) survive
+            existing = self.classes.get(self.view.name)
+            self.ensure_class(PriorityClass(
+                name=self.view.name, level=self.view.level,
+                slo=existing.slo if existing is not None else SloSpec()))
+            self.default_class = self.view.name
+        # arbiter-driven allocation-cycle moves (co-scheduled DWP): re-home
+        # live sequences when the view's assignment changes under us
+        self.view.on_assignment_change(self._rehome_live)
         self._ids = itertools.count()
         self.queued: list[Request] = []
         self.prefilling: list[Request] = []
@@ -174,10 +200,11 @@ class RequestScheduler:
     # -- admission -----------------------------------------------------------
 
     def allocatable_pages(self) -> int:
-        """Pages a single sequence could ever hold at once: the pool minus
-        the swap reservation (reserved slots are for *parked* copies)."""
+        """Pages a single sequence could ever hold at once: the view's
+        capacity minus the swap reservation (reserved slots are for
+        *parked* copies)."""
         reserved = self.swap.reserved_total if self.swap is not None else 0
-        return self.pool.total_pages - reserved
+        return self.view.capacity() - reserved
 
     def submit(self, prompt: Sequence[int], *, cls: str | None = None,
                max_new: int | None = None,
@@ -194,13 +221,19 @@ class RequestScheduler:
         # accumulate pages chunk by chunk until it wedges the whole engine
         # (speculative lookahead pages count: a verify step may transiently
         # hold spec_tokens positions past the final committed one)
+        ps = self.view.page_size
         footprint = -(-(r.prefill_target + r.max_new + self.spec_tokens)
-                      // self.pool.page_size)
+                      // ps)
         if footprint > self.allocatable_pages():
+            # shared trie pages cannot rescue a single request's residency
+            # bound — they still occupy pages it must hold — but the
+            # submit-time probe names them so the error is diagnosable
+            sharable = self.view.peek_prefix(r.tokens[:r.prompt_len]) // ps
             raise ValueError(
-                f"request needs {footprint} KV pages but at most "
+                f"request needs {footprint} KV pages ({sharable} currently "
+                f"sharable via the prefix trie) but at most "
                 f"{self.allocatable_pages()} are ever allocatable "
-                "(pool minus swap reservation)")
+                "(view capacity minus swap reservation)")
         self.queued.append(r)
         self.slo.on_submit(r.sid, r.cls, r.arrival_s)
         return r.sid
@@ -260,16 +293,34 @@ class RequestScheduler:
         """Decode pages the next step will allocate for ``seqs``."""
         return sum(self._seq_growth(r.length, r.pages) for r in seqs)
 
+    def _future_pages(self, r: Request) -> int:
+        """Pages ``r`` will still allocate over its whole lifetime: the
+        logical worst case (prompt + max_new + speculative lookahead) minus
+        pages already held — shared trie pages included, which is what
+        makes the bound *physical* — plus a CoW clone when the first
+        decode write lands in a currently-shared page."""
+        ps = self.view.page_size
+        total = -(-(r.prefill_target + r.max_new + self.spec_tokens) // ps)
+        cow = 1 if (r.pages and r.prefill_target // ps < len(r.pages)
+                    and self.view.shared(r.pages[r.prefill_target // ps])) \
+            else 0
+        return max(0, total + cow - len(r.pages))
+
+    def _admitted_future(self) -> int:
+        """Remaining lifetime pages of everything already in the batch."""
+        return sum(self._future_pages(r)
+                   for r in self.running + self.prefilling)
+
     def _seq_growth(self, length: int, pages) -> int:
         """Pages one sequence's next decode step may allocate: enough fresh
         pages to cover the write span ``[length, length + spec_tokens]``
         (one page per step when speculation is off), plus a CoW clone when
         the first write position falls inside a *shared* page (the
         full-prompt-match fork)."""
-        ps = self.pool.page_size
+        ps = self.view.page_size
         need = max(0, -(-(length + self.spec_tokens + 1) // ps) - len(pages))
         if length % ps and pages \
-                and self.table.shared(pages[length // ps]):
+                and self.view.shared(pages[length // ps]):
             need += 1
         return need
 
@@ -278,7 +329,7 @@ class RequestScheduler:
     def _exclusive(self, r: Request) -> int:
         """Pages an eviction of ``r`` actually frees: its refcount-1 pages.
         Shared (prefix) pages are pinned — other sequences read them."""
-        return len(self.table.exclusive(r.pages))
+        return len(self.view.exclusive(r.pages))
 
     def victim_score(self, r: Request) -> float:
         """priority-factor x footprint x Eq.-1 stall cost (DESIGN.md §5):
@@ -286,13 +337,12 @@ class RequestScheduler:
         footprint is what the eviction frees (exclusive pages only — shared
         prefix pages stay put); the stall term prefers sequences whose
         pages already gate the batch's read time."""
-        stall = bwmodel.stall_cost(self.pool.bytes_per_domain(r.pages),
-                                   self.pool.bw)
+        stall = self.view.stall_cost(r.pages)
         return (2.0 ** -self.level(r)) * self._exclusive(r) * (stall + 1e-12)
 
     def _swap_out(self, r: Request) -> None:
         pages = self._exclusive(r)
-        r.pages, secs = self.swap.swap_out(r.pages, table=self.table)
+        r.pages, secs = self.swap.swap_out(r.pages)
         self.running.remove(r)
         r.state = State.SWAPPED
         self.swapped.append(r)
@@ -306,7 +356,7 @@ class RequestScheduler:
         touches classes above ``max_level`` (capacity pressure from a low
         class must not evict a high one). Victims must free at least one
         page — evicting an all-shared sequence reclaims nothing."""
-        while self.pool.free_count() < need:
+        while self.view.free_count() < need:
             if self.swap is None:
                 return False
             protect = self._plan.swapped_in if self._plan is not None else []
@@ -343,19 +393,18 @@ class RequestScheduler:
         frac = self.stall_preempt_fraction
         if frac is None or self.swap is None or len(self.running) < 2:
             return
-        batch = bwmodel.stall_cost(self.pool.bytes_per_domain(
-            [p for r in self.running for p in r.pages]), self.pool.bw)
+        batch = self.view.stall_cost(
+            [p for r in self.running for p in r.pages])
         if batch <= 0.0:
             return
         offenders = [
             r for r in self.running
             if self._exclusive(r) > 0
             and self.swap.can_swap_out(self._exclusive(r))
-            and bwmodel.stall_cost(self.pool.bytes_per_domain(r.pages),
-                                   self.pool.bw) > frac * batch]
+            and self.view.stall_cost(r.pages) > frac * batch]
         if offenders:
-            victim = max(offenders, key=lambda r: bwmodel.stall_cost(
-                self.pool.bytes_per_domain(r.pages), self.pool.bw))
+            victim = max(offenders,
+                         key=lambda r: self.view.stall_cost(r.pages))
             victim.resume_after = self.now + self.stall_preempt_cooldown_s
             self._swap_out(victim)
 
@@ -373,9 +422,13 @@ class RequestScheduler:
             need = (self.swap.parked_count(r.pages)
                     + self._seq_growth(r.length, r.pages)
                     + self._growth_need(self.running))
-            if self.pool.free_count() < need:
+            if self.conservative_admission:
+                need = max(need, self.swap.parked_count(r.pages)
+                           + self._future_pages(r)
+                           + self._admitted_future())
+            if self.view.free_count() < need:
                 continue
-            r.pages, secs = self.swap.swap_in(r.pages, table=self.table)
+            r.pages, secs = self.swap.swap_in(r.pages)
             self.swapped.remove(r)
             r.state = State.RUNNING
             self.running.append(r)
@@ -386,7 +439,7 @@ class RequestScheduler:
     # -- chunked prefill ------------------------------------------------------
 
     def _plan_prefills(self, plan: StepPlan) -> None:
-        ps = self.pool.page_size
+        ps = self.view.page_size
         budget = self.prefill_token_budget
         if self.spec_tokens:
             # draft+verify accounting: every running sequence's decode this
@@ -412,7 +465,7 @@ class RequestScheduler:
                 # pool, and prefill starts past them. A capacity-blocked
                 # request re-probes next step (a donor may register late);
                 # only the first probe counts in telemetry.
-                matched = self.table.match_prefix(
+                matched = self.view.probe_prefix(
                     r.tokens[:r.prompt_len], r.pages, count=not r.probed)
                 r.probed = True
                 # a full-prompt match still leaves the last prompt token to
@@ -432,10 +485,15 @@ class RequestScheduler:
                     0, -(-(target + self.spec_tokens + 1) // ps)
                     - (-(-hi // ps)))
             need = new_pages + self._growth_need(self.running) + first_decode
-            if self.pool.free_count() < need and \
+            if self.conservative_admission and r.state is State.QUEUED:
+                # admit only if the whole batch (this request included)
+                # can still run to completion on free pages alone
+                need = max(need, self._future_pages(r)
+                           + self._admitted_future())
+            if self.view.free_count() < need and \
                     not self._reclaim(need, max_level=self.level(r)):
                 continue
-            self.table.grow(r.pages, new_pages)
+            self.view.grow(r.pages, new_pages)
             # NB: trie registration happens in the *engine* after the final
             # chunk's K/V physically lands (registering at plan time let a
             # same-step matcher bump refcounts before the donor's write,
@@ -460,10 +518,17 @@ class RequestScheduler:
                 r.state = State.RUNNING
                 self.running.append(r)
 
+    def _rehome_live(self) -> None:
+        """The view's allocation cycle moved under us (arbiter-driven
+        co-scheduled tuning): re-home live sequences' pages per the new
+        weights (one batched gather/scatter; shared pages stay pinned)."""
+        for r in self.running:
+            r.pages = self.view.migrate(r.pages)
+
     def _ensure_growth(self) -> None:
         """The decode batch must be able to allocate its next pages; evict
         (any class — an undecodable batch serves nobody) or fail loudly."""
-        while self.pool.free_count() < self._growth_need(self.running):
+        while self.view.free_count() < self._growth_need(self.running):
             victims = [r for r in self.running if self._exclusive(r) > 0
                        and self.swap is not None
                        and self.swap.can_swap_out(self._exclusive(r))]
@@ -483,23 +548,13 @@ class RequestScheduler:
     def finish(self, r: Request) -> None:
         r.done = True
         r.state = State.FINISHED
-        # drop this view's references; pages nobody else holds are freed,
-        # pages shared with live sequences stay (and stay matchable)
-        self.table.release(r.pages)
+        # drop this request's references; pages nobody else holds are
+        # freed, pages shared with live sequences stay (and stay matchable)
+        self.view.release(r.pages)
         r.pages = []
         self.running.remove(r)
         self.finished.append(r)
         self.slo.on_finish(r.sid, self.now, r.produced)
-
-    # -- arbiter rebalance ----------------------------------------------------
-
-    def remap(self, id_map) -> None:
-        for r in self.prefilling + self.running + self.swapped:
-            r.pages = [int(id_map[p]) for p in r.pages]
-            assert all(p >= 0 for p in r.pages), \
-                "live page lost in rebalance"
-        if self.swap is not None:
-            self.swap.remap(id_map)
 
     # -- reporting ------------------------------------------------------------
 

@@ -2,24 +2,33 @@
 
 The paper's Observation 1 — slow domains are wasted capacity unless placement
 uses them — applies twice in serving. Live decode pages spread per BWAP
-weights (kvcache), and *cold* pages (sequences preempted by the scheduler)
-should not occupy fast-HBM capacity at all: they park in reserved slots
-carved out of the slow domains, freeing fast pages for the running batch.
-That is what lets total live KV exceed ``hbm_local`` capacity.
+weights, and *cold* pages (sequences preempted by the scheduler) should not
+occupy fast-HBM capacity at all: they park in reserved slots carved out of
+the slow domains, freeing fast pages for the running batch. That is what
+lets total live KV exceed ``hbm_local`` capacity.
 
-Mechanics: at construction the manager reserves a fraction of every
-non-worker domain's pages (``BwapPagePool.reserve_pages`` — the slots leave
-the free lists, so the allocator never hands them to live sequences). A
-swap-out distributes a victim's pages over the slow domains through a policy
-from the placement registry — ``bwap_canonical`` (weights ∝ slow-domain
-bandwidth) by default, ``uniform`` / ``local_first`` as the baselines
-``benchmarks/scheduler_bench.py`` compares — and executes the copies as one
-batched gather/scatter per pool array (placement.executor). Swap-in
-allocates destinations through ``pool.alloc_page`` (live-placement policy)
-and returns the vacated slots to the reservation.
+All placement access goes through a :class:`repro.placement.fabric.FabricView`
+(DESIGN.md §8): the view hands out reserved slots (``view.reserve``), moves
+bytes (``park_pages``/``unpark_pages``), and keeps the fabric's ownership
+and refcount ledgers consistent. A swap-out distributes a victim's pages
+over the view's slow domains through a policy from the placement registry —
+``bwap_canonical`` (weights ∝ slow-domain bandwidth) by default, ``uniform``
+/ ``local_first`` as the baselines ``benchmarks/scheduler_bench.py``
+compares — and executes the copies as one batched gather/scatter per pool
+array. Swap-in allocates destinations through the view's live placement
+policy and returns the vacated slots to the reservation.
 
-Transfer cost is the Eq.-1 max-parallel-transfer time
-(``core.bwmodel.stall_cost``) of the slower side of the copy; the engine
+**Cross-tenant slot loans** (ROADMAP arbiter-level swap): the manager
+registers as a slot provider on its view. When a bursty tenant runs out of
+reserved slots, ``swap_out`` borrows idle slots from co-tenant reservations
+through the fabric's loan broker; when a lender runs short, its shortfall
+recalls the loans — borrowers return idle slots instantly and vacate parked
+ones by relocating the bytes into their remaining reservation (one batched
+copy whose Eq.-1 time is charged to the loan record and to the reclaiming
+swap-out).
+
+Transfer cost is the Eq.-1 max-parallel-transfer time of the slower side of
+the copy under the fabric's *effective* (calibrated) bandwidths; the engine
 folds it into the step latency, which is how swap-placement quality reaches
 goodput.
 """
@@ -28,32 +37,42 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import bwmodel
 from repro.placement import policy as placement_policy
+from repro.placement.fabric import as_view
 
 
 class KVSwapManager:
-    """Swap-slot reservation + bandwidth-aware swap placement for one pool."""
+    """Swap-slot reservation + bandwidth-aware swap placement for one
+    fabric view (a bare pool is adopted into a single-view fabric)."""
 
     def __init__(self, pool, *, placement: str = "bwap_canonical",
                  reserve_fraction: float = 0.5,
-                 reserve_pages: dict[str, int] | None = None):
-        """``reserve_fraction`` of every slow (non-worker) domain's currently
+                 reserve_pages: dict[str, int] | None = None,
+                 lend: bool = True, borrow: bool = True):
+        """``reserve_fraction`` of every slow (non-home) domain's currently
         free pages is reserved, unless ``reserve_pages`` gives explicit
-        per-domain counts (by domain name; missing names reserve zero)."""
-        self.pool = pool
+        per-domain counts (by domain name; missing names reserve zero).
+        ``lend``/``borrow`` opt this tenant in or out of the fabric's
+        cross-tenant slot-loan broker."""
+        self.view = as_view(pool)
         self.placement = placement_policy.resolve(placement)
-        self.slow = list(pool.slow_domains)
-        assert self.slow, "swap needs at least one non-worker domain"
+        self.slow = list(self.view.slow_domains)
+        assert self.slow, "swap needs at least one non-home domain"
+        self.lend = lend
+        self.borrow = borrow
         self.slots: dict[int, list[int]] = {}
         for d in self.slow:
             if reserve_pages is not None:
-                n = int(reserve_pages.get(pool.domains[d].name, 0))
+                n = int(reserve_pages.get(self.view.domains[d].name, 0))
             else:
-                n = int(len(pool.free[d]) * reserve_fraction)
-            self.slots[d] = pool.reserve_pages(d, n)
+                n = int(self.view.free_domain_count(d) * reserve_fraction)
+            self.slots[d] = self.view.reserve(d, n)
         self.reserved_total = sum(len(s) for s in self.slots.values())
         self._out: set[int] = set()   # slot ids currently holding parked KV
+        self._borrowed: set[int] = set()   # slots on loan from co-tenants
+        self._lent: set[int] = set()       # own slots currently loaned out
+        self._moved: dict[int, int] = {}   # parked-page forwarding (vacate)
+        self.view.offer_slots(self)
 
     # -- capacity ------------------------------------------------------------
 
@@ -61,145 +80,259 @@ class KVSwapManager:
         return sum(len(s) for s in self.slots.values())
 
     def can_swap_out(self, num_pages: int) -> bool:
-        return self.slots_free() >= num_pages
+        """Counts slots in hand plus what the loan broker could actually
+        deliver: borrowable idle co-tenant slots in *this tenant's* slow
+        domains and instantly-recallable slots this tenant has on loan."""
+        avail = self.slots_free()
+        if self.borrow:
+            avail += self.view.borrowable()
+        if self._lent:
+            avail += self.view.recallable()
+        return avail >= num_pages
 
     def parked_count(self, page_ids) -> int:
         """How many of a view's pages currently sit in reserved slots (the
         ones swap-in must re-allocate; pinned shared pages never parked)."""
-        return sum(1 for p in page_ids if p in self._out)
+        return sum(1 for p in page_ids if self._resolve(p) in self._out)
+
+    def _resolve(self, pid: int) -> int:
+        """Chase the forwarding chain of a parked page that a loan reclaim
+        relocated after its sequence recorded the id."""
+        while pid in self._moved:
+            pid = self._moved[pid]
+        return pid
+
+    def _ensure_slots(self, n: int) -> float:
+        """Make ``n`` slots available, borrowing from co-tenants and
+        recalling own loans as needed. Returns the Eq.-1 seconds spent
+        vacating recalled slots (charged to this swap-out)."""
+        seconds = 0.0
+        short = n - self.slots_free()
+        if short > 0 and self.borrow:
+            short -= self.view.request_loan(short)
+        if short > 0 and self._lent:
+            _, secs = self.view.recall_loans(short)
+            seconds += secs
+        return seconds
+
+    # -- loan-broker provider protocol (fabric calls these) --------------------
+
+    def lendable_count(self, domains=None) -> int:
+        """Idle own slots the broker may take — optionally restricted to
+        ``domains`` (a borrower can only park in its own slow domains, so
+        an unfiltered count would over-promise)."""
+        if not self.lend:
+            return 0
+        return sum(1 for d in self.slots
+                   if domains is None or d in domains
+                   for p in self.slots[d] if p not in self._borrowed)
+
+    def idle_count(self, ids) -> int:
+        free = {p for s in self.slots.values() for p in s}
+        return sum(1 for p in ids if p in free)
+
+    def lend_slots(self, n: int, domains) -> list[int]:
+        """Hand up to ``n`` idle own slots in ``domains`` to the broker."""
+        out: list[int] = []
+        if not self.lend:
+            return out
+        for d in self.slots:
+            if d not in domains:
+                continue
+            keep = [p for p in self.slots[d] if p in self._borrowed]
+            own = [p for p in self.slots[d] if p not in self._borrowed]
+            while own and len(out) < n:
+                out.append(own.pop())
+            self.slots[d] = keep + own
+        self._lent.update(out)
+        return out
+
+    def take_slots(self, ids) -> None:
+        """Receive slots from the broker: a granted loan, or own slots
+        coming back from a reclaim."""
+        for p in ids:
+            d = self.view.domain_of(p)
+            self.slots.setdefault(d, []).append(int(p))
+            if p in self._lent:
+                self._lent.discard(p)
+            else:
+                self._borrowed.add(int(p))
+
+    def yield_slots(self, ids) -> tuple[list[int], float]:
+        """Give back loaned slots on recall. Idle ones return instantly;
+        parked ones vacate by relocating their bytes into this manager's
+        remaining slots (one batched copy, Eq.-1 cost). Slots that cannot
+        vacate (no room left) stay borrowed."""
+        returned: list[int] = []
+        ids = set(ids)
+        for d in self.slots:
+            stay = []
+            for p in self.slots[d]:
+                if p in ids and len(returned) < len(ids):
+                    returned.append(p)
+                else:
+                    stay.append(p)
+            self.slots[d] = stay
+        seconds = 0.0
+        parked = [p for p in ids if p in self._out]
+        if parked:
+            src, dst = [], []
+            for p in parked:
+                home = None
+                for d in self.slots:
+                    spare = [q for q in self.slots[d]
+                             if q not in ids and q not in dst]
+                    if spare:
+                        home = spare[-1]
+                        break
+                if home is None:
+                    continue            # nowhere to vacate: stays borrowed
+                self.slots[self.view.domain_of(home)].remove(home)
+                src.append(p)
+                dst.append(home)
+            if src:
+                self.view.repark_pages(src, dst)
+                for s, t in zip(src, dst):
+                    self._out.discard(s)
+                    self._out.add(t)
+                    self._moved[s] = t
+                    returned.append(s)
+                seconds = self._transfer_seconds(
+                    [self.view.domain_of(s) for s in src],
+                    [self.view.domain_of(t) for t in dst])
+        for p in returned:
+            self._borrowed.discard(p)
+        return returned, seconds
+
+    def parked_ids(self):
+        return set(self._out)
+
+    # -- teardown --------------------------------------------------------------
+
+    def release_parked(self, page_ids) -> list[int]:
+        """A swapped-out sequence died: discard its parked KV in place (no
+        copies) — the slots rejoin the reservation, the table references
+        drop. Returns the page ids that were *not* parked (live shared
+        pages the caller releases normally)."""
+        live: list[int] = []
+        for p in page_ids:
+            q = self._forward(p)         # retire the chain: the slot may
+            if q in self._out:           # be re-lent and re-parked later
+                self._out.discard(q)
+                self.slots[self.view.domain_of(q)].append(int(q))
+                self.view.drop_parked_ref(q)
+            else:
+                live.append(q)
+        return live
+
+    def close(self) -> None:
+        """Tear down the reservation (tenant leaving): loans settle
+        through the fabric (borrowed slots go home, lent slots come back
+        or transfer their charge), then every remaining slot returns to
+        the allocator. Requires no parked KV — swap sequences in or
+        ``release_parked`` them first."""
+        assert not self._out, "close() with parked KV still in slots"
+        self.view.settle_loans()
+        for d in list(self.slots):
+            for p in self.slots[d]:
+                self.view.unreserve(p)
+            self.slots[d] = []
+        self.reserved_total = 0
+        self._borrowed.clear()
+        self._lent.clear()
+        self.view.withdraw_slots()
 
     # -- placement over the slow-domain subspace ------------------------------
 
+    def _slot_domains(self) -> list[int]:
+        return sorted(self.slots)
+
     def _slot_counts(self, num_pages: int) -> np.ndarray:
         """How many of ``num_pages`` go to each slow domain (policy-weighted,
-        clamped to available slots)."""
+        clamped to available slots; order = ``_slot_domains``)."""
+        doms = self._slot_domains()
         ctx = placement_policy.PlacementContext(
-            bandwidths=np.asarray([self.pool.domains[d].read_bw
-                                   for d in self.slow]),
+            bandwidths=np.asarray([self.view.domains[d].read_bw
+                                   for d in doms]),
             num_pages=num_pages,
-            capacities=np.asarray([len(self.slots[d]) for d in self.slow]))
+            capacities=np.asarray([len(self.slots[d]) for d in doms]))
         return self.placement.counts(ctx)
 
     # -- the round-trip -------------------------------------------------------
 
     def swap_out(self, page_ids: list[int],
                  table=None) -> tuple[list[int], float]:
-        """Move a sequence's pages into reserved slow-domain slots; frees the
-        sources back to the pool. Returns ``(new_page_ids, seconds)`` with
-        page order preserved (the view stays positional).
+        """Move a sequence's pages into reserved slow-domain slots; frees
+        the sources back to the fabric. Returns ``(new_page_ids, seconds)``
+        with page order preserved (the view stays positional). ``table`` is
+        accepted for backward compatibility and must be the view's own
+        page table — pinning and remapping always ride the fabric now.
 
-        With ``table`` (a :class:`~repro.serve.pagetable.PageTable`), pages
-        with refcount > 1 are *pinned*: other live sequences read them, so
-        they keep their fast-domain homes and only this sequence's exclusive
-        pages park. Moved pages leave the prefix trie (a parked page must
-        not be matched — its id changes again on swap-in) and are remapped
-        under the table so the refcount follows the bytes."""
-        movable = [p for p in page_ids
-                   if table is None or not table.shared(p)]
+        Pages with refcount > 1 are *pinned*: other live sequences read
+        them, so they keep their fast-domain homes and only this sequence's
+        exclusive pages park. Moved pages leave the prefix trie (a parked
+        page must not be matched — its id changes again on swap-in) and the
+        fabric carries refcounts and holds onto the slots."""
+        assert table is None or table is self.view.table, \
+            "swap rides the fabric view's own page table"
+        movable = [p for p in page_ids if not self.view.shared(p)]
         n = len(movable)
         if n == 0:
             return list(page_ids), 0.0
-        assert self.can_swap_out(n), "not enough reserved swap slots"
+        loan_seconds = self._ensure_slots(n)
+        assert self.slots_free() >= n, "not enough reserved swap slots"
         counts = self._slot_counts(n)
         dst: list[int] = []
-        for d, c in zip(self.slow, counts):
+        for d, c in zip(self._slot_domains(), counts):
             dst.extend(self.slots[d].pop() for _ in range(int(c)))
-        src_doms = [self.pool.domain_of(p) for p in movable]
-        dst_doms = [self.pool.domain_of(p) for p in dst]
-        (self.pool.k_pool, self.pool.v_pool), _ = self.pool.executor.execute(
-            (self.pool.k_pool, self.pool.v_pool), movable, dst,
-            src_domains=src_doms, dst_domains=dst_doms)
+        src_doms = [self.view.domain_of(p) for p in movable]
+        dst_doms = [self.view.domain_of(p) for p in dst]
+        self.view.park_pages(movable, dst)
         moved = dict(zip(movable, dst))
-        if table is not None:
-            for s, d in moved.items():
-                table.unregister(s)
-                table.remap_physical(s, d)
         self._out.update(dst)
-        self.pool.free_pages(movable)
-        seconds = self._transfer_seconds(src_doms, dst_doms)
-        self.pool.telemetry.record_swap("out", n, seconds)
+        seconds = self._transfer_seconds(src_doms, dst_doms) + loan_seconds
+        self.view.telemetry.record_swap("out", n, seconds)
         return [moved.get(p, p) for p in page_ids], seconds
 
     def swap_in(self, page_ids: list[int],
                 table=None) -> tuple[list[int], float]:
-        """Bring parked pages back through the pool's live placement policy;
-        vacated slots rejoin the reservation. Pages of the view that never
-        parked (pinned shared pages) pass through untouched. Caller
-        guarantees the pool has enough allocatable pages (the scheduler
-        checks against the parked count)."""
+        """Bring parked pages back through the view's live placement
+        policy; vacated slots rejoin the reservation. Pages of the view
+        that never parked (pinned shared pages) pass through untouched.
+        Caller guarantees the view has enough allocatable pages (the
+        scheduler checks against the parked count)."""
+        assert table is None or table is self.view.table, \
+            "swap rides the fabric view's own page table"
+        page_ids = [self._forward(p) for p in page_ids]
         parked = [p for p in page_ids if p in self._out]
         n = len(parked)
         if n == 0:
             return list(page_ids), 0.0
-        dst = [self.pool.alloc_page() for _ in range(n)]
-        src_doms = [self.pool.domain_of(p) for p in parked]
-        dst_doms = [self.pool.domain_of(p) for p in dst]
-        (self.pool.k_pool, self.pool.v_pool), _ = self.pool.executor.execute(
-            (self.pool.k_pool, self.pool.v_pool), parked, dst,
-            src_domains=src_doms, dst_domains=dst_doms)
+        src_doms = [self.view.domain_of(p) for p in parked]
+        dst = self.view.unpark_pages(parked)
+        dst_doms = [self.view.domain_of(p) for p in dst]
         moved = dict(zip(parked, dst))
-        if table is not None:
-            for s, d in moved.items():
-                table.remap_physical(s, d)
-        spilled = False
         for pid in parked:
             self._out.discard(pid)
-            d = self.pool.domain_of(pid)
-            if d in self.slots:
-                self.slots[d].append(int(pid))
-            else:   # a rebalance spilled this parked slot into a worker
-                self.pool.free[d].append(int(pid))   # domain: hand it back
-                self.reserved_total -= 1
-                spilled = True
-        if spilled:
-            self._sync_pool_reserved()
+            self.slots[self.view.domain_of(pid)].append(int(pid))
         seconds = self._transfer_seconds(src_doms, dst_doms)
-        self.pool.telemetry.record_swap("in", n, seconds)
+        self.view.telemetry.record_swap("in", n, seconds)
         return [moved.get(p, p) for p in page_ids], seconds
 
+    def _forward(self, pid: int) -> int:
+        """Resolve (and retire) the forwarding chain for one page id."""
+        out = pid
+        while out in self._moved:
+            out = self._moved.pop(out)
+        return out
+
     def _transfer_seconds(self, src_doms, dst_doms) -> float:
-        """Eq.-1 cost of the copy: reads and writes overlap across domains,
-        so the transfer takes the slower of the two sides."""
-        nd = len(self.pool.domains)
-        read = np.bincount(src_doms, minlength=nd) * self.pool.page_bytes
-        write = np.bincount(dst_doms, minlength=nd) * self.pool.page_bytes
-        return max(bwmodel.stall_cost(read, self.pool.bw),
-                   bwmodel.stall_cost(write, self.pool.bw))
-
-    # -- arbiter rebalance ----------------------------------------------------
-
-    def remap(self, id_map: np.ndarray) -> None:
-        """Rewrite reserved slot ids after the pool was rebuilt (slots are
-        live pages from the pool's perspective, so the id map covers them)."""
-        self._out = {int(id_map[p]) for p in self._out}
-        assert all(p >= 0 for p in self._out), "parked page lost in rebalance"
-        for d in list(self.slots):
-            self.slots[d] = [int(id_map[p]) for p in self.slots[d]]
-            assert all(p >= 0 for p in self.slots[d]), \
-                "reserved swap slot lost in rebalance"
-        # domain indices are stable across rebalance (sizes change, order
-        # does not), but a shrinking rebalance may spill a slot into
-        # another domain — re-key, and hand slots that landed in *worker*
-        # domains back to the allocator (fast pages must not sit idle in a
-        # parking reservation, and _slot_counts only spans slow domains).
-        rekey: dict[int, list[int]] = {d: [] for d in self.slow}
-        for pages in self.slots.values():
-            for p in pages:
-                d = self.pool.domain_of(p)
-                if d in rekey:
-                    rekey[d].append(p)
-                else:
-                    self.pool.free[d].append(p)
-                    self.reserved_total -= 1
-        self.slots = rekey
-        self._sync_pool_reserved()
-
-    def _sync_pool_reserved(self) -> None:
-        """Mirror the reservation (free slots + parked pages) into the
-        pool's per-domain reserved counts — what swap-aware DWP reads."""
-        counts = np.zeros(len(self.pool.domains), dtype=np.int64)
-        for d, pages in self.slots.items():
-            counts[d] += len(pages)
-        for p in self._out:
-            counts[self.pool.domain_of(p)] += 1
-        self.pool.set_reserved_counts(counts)
+        """Eq.-1 cost of the copy under the fabric's effective bandwidths:
+        reads and writes overlap across domains, so the transfer takes the
+        slower of the two sides."""
+        nd = len(self.view.domains)
+        pb = self.view.page_bytes
+        read = np.bincount(src_doms, minlength=nd) * pb
+        write = np.bincount(dst_doms, minlength=nd) * pb
+        return max(self.view.stall_seconds(read),
+                   self.view.stall_seconds(write))

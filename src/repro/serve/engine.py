@@ -21,8 +21,8 @@ from repro.kernels.paged_attention import ops as paged_ops
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 from repro.models.lm import LM
+from repro.placement.fabric import as_view
 from repro.scheduler.scheduler import Request, RequestScheduler
-from repro.serve.kvcache import BwapPagePool
 
 # The per-sequence record moved into the scheduler subsystem; the old name
 # stays importable (tests, examples).
@@ -32,11 +32,11 @@ Sequence_ = Request
 class PagedDecoder:
     """Per-layer decode through the page pool (dense/GQA families)."""
 
-    def __init__(self, cfg: ModelConfig, params, pool: BwapPagePool):
+    def __init__(self, cfg: ModelConfig, params, pool):
         assert cfg.family in ("dense", "vlm") and cfg.mla is None
         self.cfg = cfg
         self.params = params
-        self.pool = pool
+        self.view = as_view(pool)        # placement + data plane surface
         gp = params["groups"][0]
         self.stacked = not isinstance(gp, list)
 
@@ -72,7 +72,7 @@ class PagedDecoder:
         cdt = jnp.dtype(cfg.compute_dtype)
         b = len(chunks)
         nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
-        ps = self.pool.page_size
+        ps = self.view.page_size
         t = max(len(toks) for toks, _, _ in chunks)
         toks_pad = np.zeros((b, t), np.int32)
         pos_pad = np.zeros((b, t), np.int32)
@@ -122,12 +122,12 @@ class PagedDecoder:
             # real positions' K/V lands before attention: the causal mask
             # then covers prefix and intra-chunk keys uniformly (padded
             # positions never land)
-            self.pool.k_pool = self.pool.k_pool.at[l, pids, slots].set(
+            self.view.k_pool = self.view.k_pool.at[l, pids, slots].set(
                 k[seq_i, tok_i])
-            self.pool.v_pool = self.pool.v_pool.at[l, pids, slots].set(
+            self.view.v_pool = self.view.v_pool.at[l, pids, slots].set(
                 v[seq_i, tok_i])
             att = paged_ops.paged_prefill_attention_batch(
-                q, self.pool.k_pool[l], self.pool.v_pool[l], tbl, qs,
+                q, self.view.k_pool[l], self.view.v_pool[l], tbl, qs,
                 impl="reference")
             x = x + (att.reshape(b, t, nq * hd)
                      @ p["attn"]["wo"].astype(cdt))
@@ -146,7 +146,7 @@ class PagedDecoder:
         cdt = jnp.dtype(cfg.compute_dtype)
         b = tokens.shape[0]
         nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
-        ps = self.pool.page_size
+        ps = self.view.page_size
         x = self.params["embed"][tokens].astype(cdt)     # [B,1,d]
         if cfg.embed_scale:
             x = x * np.sqrt(cfg.d_model)
@@ -170,10 +170,10 @@ class PagedDecoder:
             # pool copies per layer)
             pages = jnp.take_along_axis(tables, (positions // ps)[:, None],
                                         axis=1)[:, 0]
-            self.pool.write_decode_batch(l, pages, positions % ps,
+            self.view.write_decode_batch(l, pages, positions % ps,
                                          k[:, 0], v[:, 0])
             att = paged_ops.paged_attention(
-                q[:, 0], self.pool.k_pool[l], self.pool.v_pool[l],
+                q[:, 0], self.view.k_pool[l], self.view.v_pool[l],
                 tables, lens + 1, impl="reference")
             x = x + (att.reshape(b, 1, nq * hd)
                      @ p["attn"]["wo"].astype(cdt))
@@ -191,7 +191,7 @@ class ServeEngine:
     :class:`RequestScheduler` (pass one in to configure priority classes and
     KV swap; the default scheduler reproduces plain continuous batching)."""
 
-    def __init__(self, cfg: ModelConfig, params, pool: BwapPagePool,
+    def __init__(self, cfg: ModelConfig, params, pool,
                  max_batch: int = 8, max_new: int = 32, seed: int = 0,
                  scheduler: RequestScheduler | None = None,
                  wall_clock: bool = True, sim_step_s: float = 0.0,
@@ -199,13 +199,12 @@ class ServeEngine:
                  prefix_reuse: bool = True,
                  drafter=None):
         self.cfg = cfg
-        self.pool = pool
-        self.table = pool.table
+        self.view = as_view(pool)        # the only placement surface
         self.model = LM(cfg)
-        self.decoder = PagedDecoder(cfg, params, pool)
+        self.decoder = PagedDecoder(cfg, params, self.view)
         self.params = params
         self.scheduler = scheduler if scheduler is not None else \
-            RequestScheduler(pool, max_batch=max_batch,
+            RequestScheduler(self.view, max_batch=max_batch,
                              default_max_new=max_new)
         # wall_clock=False runs the virtual clock on the Eq.-1 analytic
         # terms only — deterministic SLO numbers for benchmarks/tests;
@@ -216,7 +215,7 @@ class ServeEngine:
         # bit-exactness oracle); prefix_reuse=False disables trie matching
         # (the footprint baseline benchmarks compare against)
         self.incremental_prefill = incremental_prefill
-        self.table.prefix_reuse = prefix_reuse
+        self.view.table.prefix_reuse = prefix_reuse
         # speculative multi-token decode (DESIGN.md §7): a drafter proposes
         # continuations, the verify step accepts only what the model's own
         # argmax confirms — outputs stay token-identical to greedy. The
@@ -282,7 +281,7 @@ class ServeEngine:
             # defensive CoW: prefill chunks land in freshly-allocated
             # exclusive pages, but a fork here is what keeps a mis-planned
             # write from corrupting another sequence's shared prefix
-            self.table.ensure_writable(seq.pages, lo, hi)
+            self.view.ensure_writable(seq.pages, lo, hi)
             self.prefill_chunks_run += 1
             self.prefill_tokens_computed += hi - lo
             fused.append((seq.tokens[lo:hi], seq.pages, lo))
@@ -292,10 +291,10 @@ class ServeEngine:
             self._register_if_done(seq, hi)
 
     def _prefill_chunk_recompute(self, seq: Sequence_, lo: int, hi: int):
-        self.table.ensure_writable(seq.pages, lo, hi)
+        self.view.ensure_writable(seq.pages, lo, hi)
         self.prefill_chunks_run += 1
         self.prefill_tokens_computed += hi
-        ps = self.pool.page_size
+        ps = self.view.page_size
         toks = jnp.asarray([seq.tokens[:hi]], jnp.int32)
         x = self.model.embed(self.params, {"tokens": toks})
         pos = jnp.arange(hi, dtype=jnp.int32)[None]
@@ -311,8 +310,8 @@ class ServeEngine:
         pids = np.asarray([seq.pages[p // ps] for p in positions], np.int32)
         slots = (positions % ps).astype(np.int32)
         # one scatter per pool array for the whole chunk
-        self.pool.k_pool = self.pool.k_pool.at[:, pids, slots].set(k[:, lo:hi])
-        self.pool.v_pool = self.pool.v_pool.at[:, pids, slots].set(v[:, lo:hi])
+        self.view.k_pool = self.view.k_pool.at[:, pids, slots].set(k[:, lo:hi])
+        self.view.v_pool = self.view.v_pool.at[:, pids, slots].set(v[:, lo:hi])
         seq.length = hi
         self._register_if_done(seq, hi)
 
@@ -321,8 +320,8 @@ class ServeEngine:
         only now may they enter the prefix trie (registering any earlier
         lets a matcher reference pages that were never written)."""
         if hi >= seq.prefill_target:
-            self.table.register_prefix(seq.tokens, seq.pages,
-                                       seq.prefill_target)
+            self.view.register_prefix(seq.tokens, seq.pages,
+                                      seq.prefill_target)
 
     def step(self) -> dict:
         t0 = time.monotonic()
@@ -359,7 +358,7 @@ class ServeEngine:
         # physical page once per launch).
         read_pages = list(dict.fromkeys(
             p for s in batch for p in s.pages)) if batch else []
-        sim = max(self.pool.expected_read_time(read_pages), 0.0) \
+        sim = max(self.view.expected_read_time(read_pages), 0.0) \
             if batch else 0.0
         dt = ((wall if self.wall_clock else 0.0) + sim + plan.swap_seconds
               + (self.sim_step_s if batch else 0.0))
@@ -375,25 +374,24 @@ class ServeEngine:
             # the DWP tuner judges *placement*: feed it the step latency
             # minus swap transfers — a preemption spike says nothing about
             # where the live pages sit and would trigger spurious re-homing
-            if self.pool.record_latency(dt - plan.swap_seconds):
+            if self.view.record_latency(dt - plan.swap_seconds):
                 # the tuner moved the allocation cycle: re-home live
                 # sequences (batched gather/scatter through the executor);
                 # shared pages are pinned and refcounts follow the moves
                 for s in self.scheduler.running:
-                    s.pages = self.pool.migrate_sequence(s.pages,
-                                                         table=self.table)
+                    s.pages = self.view.migrate(s.pages)
                 moved = True
-        tel = self.pool.telemetry.snapshot()
+        tel = self.view.snapshot()
         return {"active": len(self.scheduler.running),
                 "latency": dt, "migrated": moved,
-                "dwp": self.pool.tuner.dwp,
-                "occupancy": self.pool.occupancy(),
+                "dwp": self.view.dwp,
+                "occupancy": self.view.occupancy(),
                 "swapped": len(self.scheduler.swapped),
                 "swapped_out": len(plan.swapped_out),
                 "swapped_in": len(plan.swapped_in),
-                # one stats() pass per step: the snapshot already carries
-                # the page-table block via telemetry.attach_pagetable
-                "pagetable": tel.get("pagetable", self.table.stats()),
+                # one stats() pass per step: the view snapshot carries
+                # the page-table block alongside the domain counters
+                "pagetable": tel["pagetable"],
                 "prefill_tokens_computed": self.prefill_tokens_computed,
                 "decode_steps": self.decode_steps,
                 "tokens_emitted": self.tokens_emitted,
@@ -420,15 +418,15 @@ class ServeEngine:
         return drafts if any(drafts) else None
 
     def _greedy_step(self, batch) -> None:
-        ps = self.pool.page_size
+        ps = self.view.page_size
         # grow pages where needed (the scheduler reserved capacity);
         # a decode write into a shared page — the full-prompt-match
         # case: position prompt_len-1 lives in a trie page — forks it
         for s in batch:
             if s.length % ps == 0:
-                self.table.append_page(s.pages)
+                self.view.append_page(s.pages)
             else:
-                self.table.fork_for_write(s.pages, s.length // ps)
+                self.view.fork_for_write(s.pages, s.length // ps)
         mp = max(len(s.pages) for s in batch)
         tables = np.zeros((len(batch), mp), np.int32)
         for i, s in enumerate(batch):
@@ -470,7 +468,7 @@ class ServeEngine:
         write position is ``length`` (the committed token — draft
         positions land in the forked clone or in fresh pages), and at
         least one token always commits."""
-        ps = self.pool.page_size
+        ps = self.view.page_size
         recs = []                       # per seq: (appended allocs, snap base)
         chunks = []
         snap_pids: list[int] = []
@@ -478,12 +476,12 @@ class ServeEngine:
         for s, d in zip(batch, drafts):
             lo = s.length
             if lo % ps:
-                self.table.fork_for_write(s.pages, lo // ps)
+                self.view.fork_for_write(s.pages, lo // ps)
             appended = []               # (pid, marker_before, marker_after)
             while len(s.pages) * ps <= lo + len(d):
-                m0 = self.pool.alloc_marker()
-                pid = self.table.append_page(s.pages)
-                appended.append((pid, m0, self.pool.alloc_marker()))
+                m0 = self.view.alloc_marker()
+                pid = self.view.append_page(s.pages)
+                appended.append((pid, m0, self.view.alloc_marker()))
             base = len(snap_pids)
             for p in range(lo + 1, lo + len(d) + 1):   # speculative slots
                 snap_pids.append(int(s.pages[p // ps]))
@@ -493,8 +491,8 @@ class ServeEngine:
         snap_k = snap_v = None
         if snap_pids:
             # pre-write bytes of every speculative slot, all layers at once
-            snap_k = self.pool.k_pool[:, snap_pids, snap_slots]
-            snap_v = self.pool.v_pool[:, snap_pids, snap_slots]
+            snap_k = self.view.k_pool[:, snap_pids, snap_slots]
+            snap_v = self.view.v_pool[:, snap_pids, snap_slots]
         logits = self.decoder.forward_chunks(chunks, want_logits=True)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))   # [B,T]
         drafted = accepted = emitted = 0
@@ -526,20 +524,14 @@ class ServeEngine:
             keep = -(-s.length // ps)   # pages greedy would hold right now
             while len(s.pages) > keep:
                 pid, m0, m1 = appended.pop()
-                popped = self.table.pop_page(s.pages)
+                popped = self.view.pop_page(s.pages)
                 assert popped == pid, "speculative page stack out of order"
-                self.pool.undo_alloc(pid, m0, m1)
+                self.view.undo_alloc(pid, m0, m1)
         if rest_idx:
             idx = np.asarray(rest_idx)
-            self.pool.k_pool = self.pool.k_pool.at[
+            self.view.k_pool = self.view.k_pool.at[
                 :, rest_pids, rest_slots].set(snap_k[:, idx])
-            self.pool.v_pool = self.pool.v_pool.at[
+            self.view.v_pool = self.view.v_pool.at[
                 :, rest_pids, rest_slots].set(snap_v[:, idx])
         self.tokens_emitted += emitted
-        self.pool.telemetry.record_spec(drafted, accepted, emitted)
-
-    def remap_pages(self, id_map: np.ndarray) -> None:
-        """Rewrite page tables after the pool was rebalanced (arbiter
-        capacity change): old page id -> new page id. Covers running,
-        prefilling, and swapped sequences plus the swap reservation."""
-        self.scheduler.remap(id_map)
+        self.view.telemetry.record_spec(drafted, accepted, emitted)

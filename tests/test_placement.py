@@ -294,17 +294,6 @@ SPECS = [
 ]
 
 
-class StubEngine:
-    """Just enough engine for the arbiter: live sequences + remap hook."""
-
-    def __init__(self):
-        self.active = []
-        self.remaps = []
-
-    def remap_pages(self, id_map):
-        self.remaps.append(np.asarray(id_map))
-
-
 def test_arbiter_partitions_capacity_and_homes(small_cfg):
     arb = DomainArbiter(SPECS, page_size=4)
     a = arb.register("A", small_cfg, priority=Priority.HIGH, share=0.5)
@@ -318,8 +307,12 @@ def test_arbiter_partitions_capacity_and_homes(small_cfg):
     assert a.home == (0,)
     assert b.home == (1,)
     assert b.cotuner is not None and a.cotuner is None
-    # tenant pools see their own quota as domain capacity
-    assert [d.num_pages for d in a.pool.domains] == a.quotas.tolist()
+    # both tenants are views over ONE shared fabric pool; each view's
+    # quota ledger caps what it can allocate
+    assert a.view.pool is b.view.pool
+    np.testing.assert_array_equal(a.view.quota, a.quotas)
+    assert a.view.capacity() == int(a.quotas.sum())
+    assert a.view.free_count() <= a.view.capacity()
 
 
 def test_arbiter_runs_two_stage_search_from_latency_streams(small_cfg):
@@ -338,16 +331,19 @@ def test_arbiter_runs_two_stage_search_from_latency_streams(small_cfg):
     assert b.dwp >= b.cotuner.dwp_lower_bound - 1e-9
 
 
-def test_arbiter_observe_migrates_attached_engine(small_cfg):
+def test_arbiter_observe_rehomes_view_sequences(small_cfg):
+    """Cycle moves from the co-scheduled search re-home live pages through
+    the view's assignment-change subscription — no attach_engine."""
     arb = DomainArbiter(SPECS, page_size=4)
     arb.register("A", small_cfg, priority=Priority.HIGH, share=0.4)
     b = arb.register("B", small_cfg, priority=Priority.BEST_EFFORT,
                      share=0.4, dwp_config=DWPConfig(n=2, c=0))
-    eng = StubEngine()
-    arb.attach_engine("B", eng)
     seq = type("S", (), {})()
-    seq.pages = [b.pool.alloc_page() for _ in range(6)]
-    eng.active = [seq]
+    seq.pages = []
+    for _ in range(6):
+        b.view.append_page(seq.pages)
+    b.view.on_assignment_change(
+        lambda: seq.__setattr__("pages", b.view.migrate(seq.pages)))
     moved_any = False
     for _ in range(40):
         arb.observe("A", 1.0 - 0.5 * b.dwp)         # keep stage 1 climbing
@@ -355,44 +351,55 @@ def test_arbiter_observe_migrates_attached_engine(small_cfg):
         if b.dwp >= 0.5:
             break
     assert moved_any
-    # pages were re-homed toward B's home domain as its DWP rose
-    assert all(p < b.pool.total_pages for p in seq.pages)
+    # pages were re-homed (valid ids, ledgers consistent) as B's DWP rose
+    assert all(p < b.view.pool.total_pages for p in seq.pages)
+    arb.fabric.check_invariants()
+    b.view.release(seq.pages)
+    arb.fabric.check_invariants()
 
 
-def test_arbiter_unregister_rebalances_capacity(small_cfg):
+def test_arbiter_unregister_redistributes_quota(small_cfg):
+    """Tenant leave is pure ledger arithmetic on the shared fabric: the
+    survivor's quota grows in place — no pool rebuild, no id remapping,
+    live pages untouched."""
     arb = DomainArbiter(SPECS, page_size=4)
     a = arb.register("A", small_cfg, priority=Priority.HIGH, share=0.5)
     b = arb.register("B", small_cfg, priority=Priority.BEST_EFFORT,
                      share=0.5)
-    eng = StubEngine()
-    arb.attach_engine("A", eng)
     seq = type("S", (), {})()
-    seq.pages = [a.pool.alloc_page() for _ in range(5)]
-    eng.active = [seq]
+    seq.pages = []
+    for _ in range(5):
+        a.view.append_page(seq.pages)
+    pages_before = list(seq.pages)
     quota_before = a.quotas.copy()
     b_quota = b.quotas.copy()
     grants = arb.unregister("B")
     np.testing.assert_array_equal(a.quotas, quota_before + grants["A"])
     np.testing.assert_array_equal(grants["A"], b_quota)   # sole survivor
-    assert [d.num_pages for d in a.pool.domains] == a.quotas.tolist()
-    assert len(eng.remaps) == 1                     # engine table remapped
+    np.testing.assert_array_equal(a.view.quota, a.quotas)
+    assert seq.pages == pages_before                # live pages untouched
     assert "B" not in arb.tenants
+    assert "B" not in arb.fabric.views
     # all freed capacity went to the sole survivor...
     assert (arb.free == 0).all()
     # ...and B's home domain is claimable again
     assert 1 not in arb._claimed_homes
+    arb.fabric.check_invariants()
 
 
 def test_arbiter_interference_tracks_foreign_residency(small_cfg):
     arb = DomainArbiter(SPECS, page_size=4)
-    a = arb.register("A", small_cfg, priority=Priority.HIGH, share=0.4)
+    arb.register("A", small_cfg, priority=Priority.HIGH, share=0.4)
     b = arb.register("B", small_cfg, priority=Priority.BEST_EFFORT,
                      share=0.4)
     base = arb.interference("A")
-    # push B pages onto A's home domain (domain 0)
-    taken = [b.pool.free[0].pop() for _ in range(4)]
+    # push B pages onto A's home domain (domain 0): allocate until the
+    # view ledger shows residency there
+    pages = []
+    while int(b.view.used_pages()[0]) < 4:
+        b.view.append_page(pages)
     assert arb.interference("A") > base
-    b.pool.free[0].extend(taken)
+    b.view.release(pages)
 
 
 # -- checkpoint staging through the registry ---------------------------------

@@ -228,20 +228,24 @@ def test_swap_random_interleavings_preserve_kv(footprints, seed):
         assert (got_k == s["fill"]).all() and (got_v == -s["fill"]).all()
 
 
-def test_remap_returns_worker_domain_slots_to_allocator(small_lm):
-    """A shrinking rebalance can spill reserved slots into a worker domain;
-    remap must hand those back to the allocator, keeping can_swap_out
-    consistent with what _slot_counts can actually place."""
+def test_unreserve_returns_slots_to_allocator(small_lm):
+    """Dropping part of the reservation through the fabric view hands the
+    slots back to the allocator and keeps every ledger consistent (the
+    incremental reserve/unreserve API that replaced the old bulk
+    set_reserved_counts resync)."""
     cfg, _ = small_lm
     pool = _pool(cfg, fast=8, peer=8, host=8)
     swap = KVSwapManager(pool, reserve_fraction=1.0)
     assert swap.reserved_total == 16
-    id_map = pool.rebalance([8, 4, 8])        # peer shrinks: 4 slots spill
-    swap.remap(id_map)
-    spilled = 16 - swap.reserved_total
-    assert spilled == 4
+    view = swap.view
+    free_before = view.free_count()
+    give_back = [swap.slots[1].pop() for _ in range(4)]   # peer slots
+    for pid in give_back:
+        view.unreserve(pid)
+    swap.reserved_total -= 4
+    assert view.free_count() == free_before + 4
+    assert int(pool.reserved.sum()) == 12
     assert swap.slots_free() == 12
-    assert len(pool.free[0]) == 8 - 4 + spilled   # fast pages allocatable
     assert swap.can_swap_out(12) and not swap.can_swap_out(13)
     assert swap._slot_counts(12).sum() == 12      # placeable = claimed
 
@@ -507,7 +511,10 @@ def test_forced_preemption_at_point_is_exact(small_lm, preempt_step):
 # arbiter integration: tenants as priority classes
 # ---------------------------------------------------------------------------
 
-def test_arbiter_registers_tenants_as_priority_classes(small_lm):
+def test_fabric_views_register_tenants_as_priority_classes(small_lm):
+    """Schedulers built on named fabric views pick up the tenant's class
+    level and default class from the view itself — the wiring the old
+    arbiter.attach_engine back-channel used to reach in and do."""
     cfg, params = small_lm
     arb = DomainArbiter([DomainSpec("hbm_local", 48, 819.0),
                          DomainSpec("hbm_peer", 32, 0.05),
@@ -515,12 +522,10 @@ def test_arbiter_registers_tenants_as_priority_classes(small_lm):
     ta = arb.register("prod", cfg, priority=Priority.HIGH, share=0.5)
     tb = arb.register("bulk", cfg, priority=Priority.BEST_EFFORT, share=0.5)
     sched_a = RequestScheduler(
-        ta.pool, max_batch=2, default_max_new=4,
+        ta.view, max_batch=2, default_max_new=4,
         classes=[PriorityClass("prod", 0, SloSpec(ttft_s=0.5, tpot_s=0.1))])
-    eng_a = ServeEngine(cfg, params, ta.pool, scheduler=sched_a)
-    eng_b = ServeEngine(cfg, params, tb.pool, max_batch=2, max_new=4)
-    arb.attach_engine("prod", eng_a)
-    arb.attach_engine("bulk", eng_b)
+    eng_a = ServeEngine(cfg, params, ta.view, scheduler=sched_a)
+    eng_b = ServeEngine(cfg, params, tb.view, max_batch=2, max_new=4)
     assert eng_a.scheduler.classes["prod"].level \
         > eng_b.scheduler.classes["bulk"].level
     assert eng_a.scheduler.default_class == "prod"
@@ -534,9 +539,7 @@ def test_arbiter_registers_tenants_as_priority_classes(small_lm):
     _drain(eng_b)
     assert eng_a.finished[0].cls == "prod"
     assert eng_b.finished[0].cls == "bulk"
-    assert pool_slo_classes(ta.pool) == ["prod"]
-
-
-def pool_slo_classes(pool):
-    snap = pool.telemetry.snapshot()
-    return sorted(snap.get("slo", {}))
+    # one shared fabric telemetry carries both tenants' SLO rows
+    snap = ta.view.snapshot()
+    assert sorted(snap.get("slo", {})) == ["bulk", "prod"]
+    arb.fabric.check_invariants()

@@ -296,9 +296,9 @@ def test_eq1_read_set_includes_finishing_sequences(small_lm):
     eng = ServeEngine(cfg, params, pool, max_batch=1, max_new=1,
                       wall_clock=False, sim_step_s=0.001)
     seen = []
-    orig = pool.expected_read_time
-    pool.expected_read_time = lambda pages: (seen.append(list(pages)),
-                                             orig(pages))[1]
+    orig = eng.view.expected_read_time
+    eng.view.expected_read_time = lambda pages: (seen.append(list(pages)),
+                                                 orig(pages))[1]
     eng.submit([3, 17, 29, 5, 8])
     _drain(eng)
     assert len(eng.finished) == 1
@@ -317,9 +317,9 @@ def test_eq1_read_set_dedups_shared_pages(small_lm):
     eng = ServeEngine(cfg, params, pool, max_batch=2, max_new=4,
                       wall_clock=False, sim_step_s=0.001)
     seen = []
-    orig = pool.expected_read_time
-    pool.expected_read_time = lambda pages: (seen.append(list(pages)),
-                                             orig(pages))[1]
+    orig = eng.view.expected_read_time
+    eng.view.expected_read_time = lambda pages: (seen.append(list(pages)),
+                                                 orig(pages))[1]
     prompt = [3, 17, 29, 5, 8, 2, 40, 11, 9]   # target 8 = 2 full pages
     eng.submit(list(prompt))
     eng.step()                                 # A prefills + registers
