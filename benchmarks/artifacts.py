@@ -1,0 +1,64 @@
+"""Canonical benchmark artifacts — one `BENCH_*.json` per suite, at the
+repo root, written deterministically (sorted keys, fixed float coercion)
+so two runs on the same seed diff clean.
+
+Every suite calls :func:`dump` for its gate-carrying result table;
+:func:`check` is the CI tripwire that fails the build when an expected
+artifact is missing or unparseable:
+
+    PYTHONPATH=src python -m benchmarks.artifacts          # check all
+    PYTHONPATH=src python -m benchmarks.artifacts BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# the full artifact contract: benchmarks.run and CI both end by asserting
+# each of these exists at the repo root and parses as JSON
+EXPECTED = (
+    "BENCH_placement.json",   # placement_bench: executor vs floor
+    "BENCH_scheduler.json",   # scheduler_bench.compare: swap placement
+    "BENCH_prefix.json",      # scheduler_bench.prefix_compare
+    "BENCH_fabric.json",      # scheduler_bench.fabric_compare
+    "BENCH_persist.json",     # scheduler_bench.persist_compare
+    "BENCH_serve.json",       # serve_bench.speculative_compare
+)
+
+
+def dump(name: str, data) -> pathlib.Path:
+    """Write one artifact to the repo root. `name` must be the full
+    `BENCH_*.json` filename so greps for the contract stay trivial."""
+    assert name.startswith("BENCH_") and name.endswith(".json"), name
+    path = ROOT / name
+    path.write_text(json.dumps(data, indent=1, sort_keys=True,
+                               default=float) + "\n")
+    print(f"[artifact {path}]")
+    return path
+
+
+def check(names=EXPECTED) -> None:
+    """Fail (SystemExit) unless every named artifact exists at the repo
+    root and round-trips through json.loads."""
+    missing = [n for n in names if not (ROOT / n).is_file()]
+    if missing:
+        raise SystemExit(
+            f"missing benchmark artifacts at {ROOT}: {', '.join(missing)}")
+    broken = []
+    for n in names:
+        try:
+            json.loads((ROOT / n).read_text())
+        except ValueError:
+            broken.append(n)
+    if broken:
+        raise SystemExit(
+            f"unparseable benchmark artifacts: {', '.join(broken)}")
+    print(f"[artifacts OK — {len(names)} present at {ROOT}]")
+
+
+if __name__ == "__main__":
+    check(tuple(sys.argv[1:]) or EXPECTED)

@@ -8,14 +8,12 @@ pool copy per page). Also times policy weight/assignment computation and
 pool allocation throughput.
 
 Run: PYTHONPATH=src python -m benchmarks.placement_bench [--pages 4096]
-Writes benchmarks/results/placement.json.
+Writes BENCH_placement.json at the repo root (benchmarks.artifacts).
 """
 
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
 import time
 
 import jax
@@ -24,8 +22,6 @@ import numpy as np
 
 from repro.placement import policy as placement_policy
 from repro.placement.executor import MigrationExecutor
-
-RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 
 def _time(fn, repeats: int = 1) -> float:
@@ -105,14 +101,12 @@ def bench_alloc(num_pages: int = 4096) -> dict:
             "pages_per_s": num_pages / dt}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pages", type=int, default=4096)
-    args = ap.parse_args()
-
+def suite(pages: int = 4096) -> dict:
+    """Run all three microbenchmarks, enforce the executor floor, dump
+    BENCH_placement.json. Used by __main__ and benchmarks.run."""
     print(f"migration executor: batched vs per-page loop "
-          f"({args.pages}-page migration)")
-    mig = bench_migration(args.pages)
+          f"({pages}-page migration)")
+    mig = bench_migration(pages)
     print(f"  batched   {mig['batched_s'] * 1e3:9.2f} ms")
     print(f"  per-page  {mig['per_page_loop_s'] * 1e3:9.2f} ms")
     print(f"  -> speedup {mig['speedup']:.1f}x (acceptance floor: 5x)")
@@ -129,11 +123,17 @@ def main() -> None:
     print(f"  {al['pages']} pages in {al['alloc_s'] * 1e3:.1f} ms "
           f"({al['pages_per_s']:.0f} pages/s)")
 
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "placement.json").write_text(json.dumps(
-        {"migration": mig, "policies": pol, "alloc": al}, indent=1,
-        default=float))
-    print(f"\n[JSON in {RESULTS / 'placement.json'}]")
+    from benchmarks import artifacts
+    rows = {"migration": mig, "policies": pol, "alloc": al}
+    artifacts.dump("BENCH_placement.json", rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pages", type=int, default=4096)
+    args = ap.parse_args()
+    suite(args.pages)
 
 
 if __name__ == "__main__":

@@ -17,19 +17,19 @@ placement, not of host noise. Acceptance (ISSUE 2): zero failed requests in
 every config, and BWAP-weighted swap beats ``local_first`` on goodput.
 
 Run: PYTHONPATH=src python -m benchmarks.scheduler_bench [--requests 12]
-Writes benchmarks/results/scheduler.json.
+Writes BENCH_scheduler.json / BENCH_prefix.json / BENCH_fabric.json /
+BENCH_persist.json at the repo root (benchmarks.artifacts contract).
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import pathlib
 
 import jax
 import numpy as np
 
+from benchmarks import artifacts
 from repro.configs import registry
 from repro.core.dwp import DWPConfig
 from repro.models.lm import LM
@@ -37,8 +37,6 @@ from repro.scheduler import (KVSwapManager, PriorityClass, RequestScheduler,
                              SloSpec, WorkloadSpec, generate, total_kv_pages)
 from repro.serve.engine import ServeEngine
 from repro.serve.kvcache import BwapPagePool, MemoryDomain
-
-RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 PLACEMENTS = ("bwap_canonical", "local_first", "uniform")
 
@@ -135,10 +133,7 @@ def compare(requests: int = 12, max_new: int = 24, seed: int = 0,
             f"BWAP swap placement must beat local_first on goodput "
             f"(got {bwap:.1f} vs {lf:.1f} tok/s)")
 
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "scheduler.json").write_text(
-        json.dumps(rows, indent=1, default=float))
-    print(f"[JSON in {RESULTS / 'scheduler.json'}]")
+    artifacts.dump("BENCH_scheduler.json", rows)
     return rows
 
 
@@ -219,10 +214,7 @@ def prefix_compare(requests: int = 12, max_new: int = 8, seed: int = 0,
     rows = {"reuse_on": {k: v for k, v in on.items() if k != "tokens"},
             "reuse_off": {k: v for k, v in off.items() if k != "tokens"},
             "footprint_reduction": ratio}
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "prefix_reuse.json").write_text(
-        json.dumps(rows, indent=1, default=float))
-    print(f"[JSON in {RESULTS / 'prefix_reuse.json'}]")
+    artifacts.dump("BENCH_prefix.json", rows)
     return rows
 
 
@@ -376,10 +368,150 @@ def fabric_compare(seed: int = 0, check: bool = True) -> dict:
     rows = {"fabric": {k: v for k, v in fab.items() if k != "tokens"},
             "isolated": {k: v for k, v in iso.items() if k != "tokens"},
             "best_effort_goodput_ratio": ratio}
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "BENCH_fabric.json").write_text(
-        json.dumps(rows, indent=1, default=float))
-    print(f"[JSON in {RESULTS / 'BENCH_fabric.json'}]")
+    artifacts.dump("BENCH_fabric.json", rows)
+    return rows
+
+
+def persist_compare(seed: int = 0, check: bool = True) -> dict:
+    """Warm-restart vs cold-restart TTFT over a shared-prefix trace
+    (ISSUE 6, CI-gated).
+
+    Phase 1 boots engine A with a persistent tier, serves one request per
+    preamble group (the trie now holds each group's system preamble),
+    pins the preamble chains and exports them to the on-disk store.
+    Phase 2 then submits one shared-prefix trace three ways:
+
+    - engine A continues uninterrupted          -> the token oracle;
+    - engine B is a restart (fresh pool, fresh fabric, fresh tier bound
+      to the same store) that imports the prefixes    -> warm;
+    - engine C is a restart with no store           -> cold.
+
+    Gates: generated tokens identical across A/B/C (a restart must never
+    change output), B's very first engine step hits the restored trie,
+    and cold mean TTFT / warm mean TTFT >= 1.3x. Virtual-clock
+    deterministic; the separation comes from cold re-prefilling every
+    48-token preamble in 16-token chunks while decode batches are
+    already costing time. Writes BENCH_persist.json at the repo root."""
+    from repro.placement.fabric import as_view
+    from repro.placement.persist import PersistentTier
+
+    cfg = dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                              num_layers=1, compute_dtype="float32")
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    groups, requests = 2, 8
+    preambles = [rng.integers(1, cfg.vocab_size, 48).tolist()
+                 for _ in range(groups)]
+    warmup = [preambles[g] + rng.integers(1, cfg.vocab_size, 4).tolist()
+              for g in range(groups)]
+    phase2 = [preambles[i % groups]
+              + rng.integers(1, cfg.vocab_size, 2 + i % 4).tolist()
+              for i in range(requests)]
+    store = artifacts.ROOT / "benchmarks" / "results" / "persist_store"
+    store.mkdir(parents=True, exist_ok=True)
+
+    def boot(tier):
+        pool = BwapPagePool(cfg, [
+            MemoryDomain("hbm_local", 64, 819.0, True),
+            MemoryDomain("hbm_peer_1hop", 48, 0.05, False),
+            MemoryDomain("host_dram", 64, 0.016, False),
+        ], page_size=4, dwp_config=DWPConfig(n=10 ** 6, c=1))
+        view = as_view(pool)
+        if tier is not None:
+            view.fabric.attach_persist(tier)
+        sched = RequestScheduler(pool, max_batch=requests,
+                                 prefill_token_budget=16,
+                                 default_max_new=8)
+        eng = ServeEngine(cfg, params, pool, scheduler=sched,
+                          wall_clock=False, sim_step_s=0.005)
+        return pool, view, eng
+
+    def drain(eng) -> int:
+        steps = 0
+        while (eng.active or eng.waiting) and steps < 3000:
+            eng.step()
+            steps += 1
+        return steps
+
+    def run_phase2(eng, pool) -> dict:
+        for p in phase2:
+            eng.submit(list(p), arrival_s=0.0)
+        hits0 = pool.table.prefix_hit_pages
+        eng.step()
+        first_hits = pool.table.prefix_hit_pages - hits0
+        steps = drain(eng) + 1
+        slo = eng.scheduler.slo.summary(eng.scheduler.now)
+        toks = [list(s.tokens) for s in
+                sorted(eng.finished, key=lambda s: s.sid)[-len(phase2):]]
+        return {"steps": steps,
+                "finished": len(eng.finished),
+                "ttft_mean_s": slo["classes"]["default"]["ttft_mean_s"],
+                "first_step_prefix_hit_pages": first_hits,
+                "tokens": toks}
+
+    # phase 1: serve the preamble groups, then pin + export their chains
+    tier_a = PersistentTier(bw_gbps=0.008, capacity_pages=64,
+                            directory=store)
+    pool_a, view_a, eng_a = boot(tier_a)
+    for p in warmup:
+        eng_a.submit(list(p))
+    # pin while the warmup requests are live: the trie drops a chain when
+    # its last holder releases, so the pin's own holds must land between
+    # prefill (registration) and sequence finish
+    pinned = [None] * groups
+    steps = 0
+    while (eng_a.active or eng_a.waiting) and steps < 3000:
+        eng_a.step()
+        steps += 1
+        for g, p in enumerate(preambles):
+            if pinned[g] is None:
+                pinned[g] = tier_a.pin(view_a, p)
+    assert all(k is not None for k in pinned), \
+        "warmup left no preamble chain to pin"
+    manifest = tier_a.export_prefixes(view_a)
+    view_a.fabric.check_invariants()
+
+    oracle = run_phase2(eng_a, pool_a)        # A continues uninterrupted
+
+    tier_b = PersistentTier(bw_gbps=0.008, capacity_pages=64,
+                            directory=store)  # restart: reload the store
+    pool_b, view_b, eng_b = boot(tier_b)
+    restored, restore_s = tier_b.import_prefixes(view_b)
+    view_b.fabric.check_invariants()
+    warm = run_phase2(eng_b, pool_b)
+
+    pool_c, view_c, eng_c = boot(None)        # cold restart: empty trie
+    cold = run_phase2(eng_c, pool_c)
+    identical = warm["tokens"] == cold["tokens"] == oracle["tokens"]
+
+    ratio = cold["ttft_mean_s"] / max(warm["ttft_mean_s"], 1e-9)
+    for name, r in (("oracle", oracle), ("warm", warm), ("cold", cold)):
+        print(f"  {name:7s} ttft_mean {r['ttft_mean_s'] * 1e3:7.1f} ms  "
+              f"first-step prefix hits {r['first_step_prefix_hit_pages']:3d} "
+              f"pages  steps {r['steps']:3d}")
+    print(f"-> warm restart ({len(manifest['chains'])} chains, {restored} "
+          f"pages, restore {restore_s * 1e3:.2f} ms) vs cold: "
+          f"{ratio:.2f}x mean TTFT")
+    if check:
+        assert identical, "restart (warm or cold) changed generated tokens"
+        assert restored > 0, "prefix store restored nothing"
+        assert warm["first_step_prefix_hit_pages"] > 0, \
+            "first request after warm restart missed the restored trie"
+        assert cold["first_step_prefix_hit_pages"] == 0, \
+            "cold restart had a non-empty trie — not a restart baseline"
+        assert warm["finished"] == cold["finished"] == len(phase2)
+        assert ratio >= 1.3, (
+            f"warm restart must beat cold on mean TTFT >= 1.3x "
+            f"(got {ratio:.2f}x)")
+    rows = {"oracle": {k: v for k, v in oracle.items() if k != "tokens"},
+            "warm": {k: v for k, v in warm.items() if k != "tokens"},
+            "cold": {k: v for k, v in cold.items() if k != "tokens"},
+            "restored_pages": restored,
+            "restore_seconds": restore_s,
+            "exported_chains": len(manifest["chains"]),
+            "ttft_cold_over_warm": ratio,
+            "token_identical": identical}
+    artifacts.dump("BENCH_persist.json", rows)
     return rows
 
 
@@ -390,6 +522,7 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--skip-prefix", action="store_true")
     ap.add_argument("--skip-fabric", action="store_true")
+    ap.add_argument("--skip-persist", action="store_true")
     args = ap.parse_args()
     compare(args.requests, args.new, args.seed)
     if not args.skip_prefix:
@@ -399,6 +532,9 @@ def main() -> None:
         print("\nmemory fabric — two tenants, prefix tier + swap loans "
               "vs isolated")
         fabric_compare(seed=args.seed)
+    if not args.skip_persist:
+        print("\npersistence tier — warm vs cold restart TTFT")
+        persist_compare(seed=args.seed)
 
 
 if __name__ == "__main__":

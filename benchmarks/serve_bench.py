@@ -18,7 +18,7 @@ Acceptance (ISSUE 4, gated in CI):
 - >= ``min_step_ratio`` (1.3x) fewer decode steps with speculation on.
 
 Run: PYTHONPATH=src python -m benchmarks.serve_bench [--requests 6]
-Writes benchmarks/results/BENCH_serve.json (goodput, acceptance rate,
+Writes BENCH_serve.json at the repo root (goodput, acceptance rate,
 decode steps saved, prefill forward tokens — the machine-tracked perf
 trajectory of the serving stack).
 """
@@ -27,8 +27,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import pathlib
 
 import jax
 
@@ -39,8 +37,6 @@ from repro.scheduler import (RequestScheduler, WorkloadSpec, generate)
 from repro.serve.engine import ServeEngine
 from repro.serve.kvcache import BwapPagePool, MemoryDomain
 from repro.serve.spec import PromptLookupDrafter
-
-RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 
 def _run(cfg, params, trace, *, max_new: int, drafter,
@@ -126,10 +122,8 @@ def speculative_compare(requests: int = 6, max_new: int = 32, seed: int = 0,
         "acceptance_rate": acc,
         "token_identical": identical,
     }
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "BENCH_serve.json").write_text(
-        json.dumps(rows, indent=1, default=float))
-    print(f"[JSON in {RESULTS / 'BENCH_serve.json'}]")
+    from benchmarks import artifacts
+    artifacts.dump("BENCH_serve.json", rows)
     return rows
 
 

@@ -43,28 +43,43 @@ STAGING_PAGE_BYTES = 1 << 20  # placement granularity for staging buffers
 
 
 def plan_staging(leaf_bytes: list[int], tiers: list[StagingTier],
-                 policy: str = "bwap_canonical") -> dict:
+                 policy: str = "bwap_canonical", *,
+                 page_bytes: int = STAGING_PAGE_BYTES) -> dict:
     """Spread serialized checkpoint buffers over staging tiers through the
     placement policy registry (the same Eq.-1 argument as weighted ZeRO:
     draining from all tiers in parallel hides the slow tier behind the fast
     one, rather than filling the fast tier first). Returns per-tier byte
-    totals and the max-parallel-transfer drain-time estimate."""
-    pages = max(1, int(-(-sum(leaf_bytes) // STAGING_PAGE_BYTES)))
+    totals and the max-parallel-transfer drain-time estimate.
+
+    ``page_bytes`` sets the placement granularity: checkpoints stage at
+    ``STAGING_PAGE_BYTES``; the persistent tier's prefix/page-range exports
+    reuse the same planner at KV-page granularity (``pool.page_bytes``)."""
+    pages = max(1, int(-(-sum(leaf_bytes) // page_bytes)))
     ctx = placement_policy.PlacementContext(
         bandwidths=np.asarray([t.bw_gbps for t in tiers]),
         num_pages=pages, workers=(0,),
-        capacities=np.asarray([t.capacity_bytes // STAGING_PAGE_BYTES
+        capacities=np.asarray([t.capacity_bytes // page_bytes
                                for t in tiers]))
     counts = placement_policy.resolve(policy).counts(ctx)
-    tier_bytes = counts * STAGING_PAGE_BYTES
+    tier_bytes = counts * page_bytes
     drain = max(float(b) / (t.bw_gbps * 1e9)
                 for b, t in zip(tier_bytes, tiers))
     return {
         "policy": policy,
-        "page_bytes": STAGING_PAGE_BYTES,
+        "page_bytes": page_bytes,
         "tiers": {t.name: int(b) for t, b in zip(tiers, tier_bytes)},
         "drain_time_s": drain,
     }
+
+
+def publish_dir(tmp: pathlib.Path, final: pathlib.Path) -> None:
+    """Atomic directory publish: replace ``final`` with ``tmp`` by rename.
+    A crashed writer never leaves a partially-visible directory — the same
+    contract ``CheckpointManager`` gives checkpoints, reused by the
+    persistent tier's prefix store."""
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
 
 
 def _tree_paths(tree) -> list[str]:
@@ -148,10 +163,7 @@ class CheckpointManager:
                 manifest["staging"] = {"policy": self.staging_policy,
                                        "error": str(e)}
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-        final = self.directory / name
-        if final.exists():
-            shutil.rmtree(final)
-        tmp.rename(final)                       # atomic publish
+        publish_dir(tmp, self.directory / name)
         self._point_latest(name)
         self._gc()
 

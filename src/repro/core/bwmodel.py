@@ -147,7 +147,10 @@ def optimal_weights(bw_profiled: np.ndarray) -> np.ndarray:
 
 
 def stall_cost(bytes_per_domain: np.ndarray,
-               bandwidths_gbps: np.ndarray) -> float:
+               bandwidths_gbps: np.ndarray,
+               *,
+               tier_bytes: float = 0.0,
+               tier_bw_gbps: float | None = None) -> float:
     """Eq. 1's max-parallel-transfer time for one access batch.
 
     ``bytes_per_domain[d]`` bytes stream from domain ``d`` at
@@ -156,10 +159,19 @@ def stall_cost(bytes_per_domain: np.ndarray,
     the serving stack scores with: the engine's per-step KV read time, the
     swap manager's transfer estimates, and the scheduler's victim selection
     all call it with different byte vectors.
+
+    ``tier_bytes``/``tier_bw_gbps`` append one extra row for the persistent
+    tier below the memory domains, so demotion/promotion/restore transfers
+    are priced by the same max — the tier is just one more (slow) domain in
+    Eq. 1, not a special case.
     """
     b = np.asarray(bytes_per_domain, dtype=np.float64)
     bw = np.asarray(bandwidths_gbps, dtype=np.float64)
     assert b.shape == bw.shape and (bw > 0).all()
+    if tier_bytes > 0:
+        assert tier_bw_gbps is not None and tier_bw_gbps > 0
+        b = np.append(b, float(tier_bytes))
+        bw = np.append(bw, float(tier_bw_gbps))
     if b.sum() <= 0:
         return 0.0
     return float((b / (bw * 1e9)).max())

@@ -26,7 +26,7 @@ def main():
     from repro.core.dwp import DWPConfig
     from repro.models.lm import LM
     from repro.serve.engine import ServeEngine
-    from repro.serve.kvcache import BwapPagePool, MemoryDomain
+    from repro.placement.pool import BwapPagePool, MemoryDomain
 
     cfg = registry.get_smoke_config(args.arch)
     cfg = dataclasses.replace(cfg, num_layers=2, compute_dtype="float32")

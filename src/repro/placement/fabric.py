@@ -11,8 +11,10 @@ back-channels with a single owner (DESIGN.md §8):
   (one array set per model group — which is what makes *cross-tenant*
   physical page sharing possible at all), the logical page table, the
   per-tenant quota/reservation ledgers, the swap-slot loan broker, the
-  Eq.-1 calibration state, and an event bus
-  (``on_alloc/on_free/on_migrate/on_share/on_latency``).
+  Eq.-1 calibration state, the persistent third tier
+  (:class:`~repro.placement.persist.PersistentTier`, DESIGN.md §9), and an
+  event bus (``on_alloc/on_free/on_migrate/on_share/on_latency`` plus the
+  tier's ``on_demote/on_promote/on_restore``).
 - :class:`FabricView` is a tenant-scoped handle — the **only** API the
   serve/scheduler layers touch. Page lifetime (``alloc``/``free``/CoW/
   prefix sharing), swap reservations and loans, migration, Eq.-1 cost
@@ -45,7 +47,8 @@ from repro.placement import policy as placement_policy
 from repro.placement.pool import BwapPagePool, MemoryDomain
 from repro.placement.telemetry import DomainTelemetry
 
-EVENTS = ("alloc", "free", "migrate", "share", "latency")
+EVENTS = ("alloc", "free", "migrate", "share", "latency",
+          "demote", "promote", "restore")
 
 
 @dataclasses.dataclass
@@ -89,6 +92,7 @@ class MemoryFabric:
         self._subs: dict[str, list[Callable]] = {e: [] for e in EVENTS}
         self._providers: dict[str, object] = {}   # view -> slot provider
         self.loans: list[SlotLoan] = []
+        self.persist = None                    # PersistentTier (third tier)
         self._adopted = False
         # Eq.-1 calibration (EWMA over measured per-domain transfer times);
         # starts at the analytic bandwidths and is shared by every view's
@@ -117,6 +121,7 @@ class MemoryFabric:
         fab._subs = {e: [] for e in EVENTS}
         fab._providers = {}
         fab.loans = []
+        fab.persist = None
         fab._adopted = True
         fab._alpha = 0.25
         fab._bw_cal = np.asarray(pool.bw, dtype=np.float64).copy()
@@ -128,12 +133,48 @@ class MemoryFabric:
         fab.views["default"] = view
         return fab
 
+    # -- persistent tier (third tier below the swap slots) ---------------------
+
+    def attach_persist(self, tier) -> None:
+        """Own a :class:`~repro.placement.persist.PersistentTier`. Its
+        demote/promote/restore events route into the telemetry tier
+        counters, and each event refreshes the per-tier occupancy gauges
+        (fast domains / swap slots / persistent tier)."""
+        assert self.persist is None, "fabric already owns a persistent tier"
+        self.persist = tier
+        tier.bind(self)
+        for ev in ("demote", "promote", "restore"):
+            self.subscribe(ev, self._tier_recorder(ev))
+        self.refresh_tier_gauges()
+
+    def _tier_recorder(self, event: str) -> Callable:
+        def record(pages: int = 0, seconds: float = 0.0, **_) -> None:
+            self.telemetry.record_tier(event, int(pages), float(seconds))
+            self.refresh_tier_gauges()
+        return record
+
+    def refresh_tier_gauges(self) -> None:
+        """Occupancy gauges for the three placement tiers (DESIGN.md §9)."""
+        tel, pool = self.telemetry, self.pool
+        reserved = int(pool.reserved.sum())
+        tel.record_tier_occupancy("fast_domains",
+                                  int(pool.used_pages().sum()),
+                                  pool.total_pages - reserved)
+        parked = sum(len(p.parked_ids())
+                     for p in self._providers.values())
+        tel.record_tier_occupancy("swap_slots", parked, reserved)
+        if self.persist is not None:
+            tel.record_tier_occupancy(self.persist.name,
+                                      self.persist.used_pages(),
+                                      self.persist.capacity_pages)
+
     # -- event bus ------------------------------------------------------------
 
     def subscribe(self, event: str, fn: Callable) -> None:
         """Register ``fn`` on one of the fabric events (``alloc``, ``free``,
-        ``migrate``, ``share``, ``latency``). Callbacks receive keyword
-        arguments only; unknown keys must be tolerated (``**_``)."""
+        ``migrate``, ``share``, ``latency``, ``demote``, ``promote``,
+        ``restore``). Callbacks receive keyword arguments only; unknown
+        keys must be tolerated (``**_``)."""
         assert event in EVENTS, f"unknown fabric event {event!r}"
         self._subs[event].append(fn)
 
@@ -177,6 +218,11 @@ class MemoryFabric:
         if prov is not None and hasattr(prov, "close"):
             prov.close()
         for pid in [p for p, c in list(v._held.items()) for _ in range(c)]:
+            if pid < 0:                 # persisted handle: no free-list id
+                v.drop_parked_ref(pid)
+                if pid not in self.table.ref and self.persist is not None:
+                    self.persist.forget(pid)
+                continue
             v._drop(pid)
             dead = self.table.release([pid])
             for d in dead:
@@ -432,9 +478,21 @@ class MemoryFabric:
         parked = set()
         for p in self._providers.values():
             parked |= set(p.parked_ids())
+        persisted = set(self.persist.persisted_ids()) \
+            if self.persist is not None else set()
         for pid in self.table.ref:
-            assert pid in self.owner or pid in parked, \
-                f"live page {pid} neither owned nor parked"
+            assert pid in self.owner or pid in parked \
+                or pid in persisted, \
+                f"live page {pid} neither owned, parked, nor persisted"
+        if self.persist is not None:
+            per = self.persist.per_view_counts()
+            for name, v in self.views.items():
+                assert int(v.persisted) == per.get(name, 0), \
+                    f"view {name!r} persisted ledger != tier contents"
+            for h in persisted:
+                assert h <= -2, f"persisted handle {h} collides with ids"
+                assert h not in self.owner, \
+                    f"persisted handle {h} owned as a live page"
         free = sum(len(f) for f in self.pool.free)
         assert free + len(self.owner) + int(self.pool.reserved.sum()) \
             == self.pool.total_pages, "page ids not conserved"
@@ -447,12 +505,15 @@ class MemoryFabric:
             "bw_effective_gbps": self._bw_cal.tolist(),
             "loans": [ln.as_dict() for ln in self.loans],
         }
+        if self.persist is not None:
+            out["persist"] = self.persist.stats()
         for name, v in self.views.items():
             out["views"][name] = {
                 "quota": v.quota.tolist(),
                 "used": v.used.tolist(),
                 "reserved": v.reserved.tolist(),
                 "held_logical": int(sum(v._held.values())),
+                "persisted": int(v.persisted),
                 "level": v.level,
                 "share_prefix": v.share_prefix,
                 "dwp": v.dwp,
@@ -482,6 +543,7 @@ class FabricView:
         self._adopted = adopted
         self.used = np.zeros(len(fabric.pool.domains), dtype=np.int64)
         self.reserved = np.zeros(len(fabric.pool.domains), dtype=np.int64)
+        self.persisted = 0             # this view's pages in the third tier
         self._held: dict[int, int] = {}
         self._assignment_cbs: list[Callable] = []
         pool = fabric.pool
@@ -907,18 +969,30 @@ class FabricView:
     # -- cost model ---------------------------------------------------------------
 
     def footprint(self, pages: Sequence[int]) -> np.ndarray:
-        """Per-domain resident bytes of a page set (Eq.-1 input)."""
+        """Per-domain resident bytes of a page set (Eq.-1 input). Pages
+        demoted to the persistent tier (negative handle ids) are not in any
+        domain — ``tier_bytes`` accounts them."""
         out = np.zeros(len(self.pool.domains))
         pb = self.page_bytes
         for pid in pages:
-            out[self.pool.domain_of(pid)] += pb
+            if pid >= 0:
+                out[self.pool.domain_of(pid)] += pb
         return out
+
+    def tier_bytes(self, pages: Sequence[int]) -> float:
+        """Bytes of this page set resident in the persistent tier."""
+        return float(self.page_bytes) * sum(1 for p in pages if p < 0)
 
     def stall_cost(self, pages: Sequence[int]) -> float:
         """Eq.-1 max-parallel-transfer read time of a page set under the
-        *effective* (calibrated) bandwidths."""
-        return bwmodel.stall_cost(self.footprint(pages),
-                                  self.fabric.bw_effective)
+        *effective* (calibrated) bandwidths; demoted pages contribute the
+        tier's bandwidth row."""
+        tb = self.tier_bytes(pages)
+        tier = self.fabric.persist
+        return bwmodel.stall_cost(
+            self.footprint(pages), self.fabric.bw_effective,
+            tier_bytes=tb if tier is not None else 0.0,
+            tier_bw_gbps=tier.bw_gbps if tier is not None else None)
 
     def stall_seconds(self, bytes_per_domain: np.ndarray) -> float:
         return bwmodel.stall_cost(bytes_per_domain,

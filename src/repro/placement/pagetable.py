@@ -12,7 +12,7 @@ workload (arXiv 2112.12685) and co-locate shared hot pages in fast domains
 
 - **Refcounts** — ``ref[pid]`` counts how many sequence views hold physical
   page ``pid``. Pages are allocated from / returned to the
-  :class:`~repro.serve.kvcache.BwapPagePool` only through this table
+  :class:`~repro.placement.pool.BwapPagePool` only through this table
   (``append_page`` / ``release``); a page is freed when its last holder
   releases it.
 - **Prefix trie** — completed *prompt* pages are registered under a chain
@@ -223,6 +223,49 @@ class PageTable:
                     self._nodes[parent].children.add(nid)
                 added += 1
             parent = nid
+        return added
+
+    # -- chain export / import (persistence tier, DESIGN.md §9) ----------------
+
+    def export_chains(self, select=None) -> list[dict]:
+        """Serialize the trie as maximal root-anchored chains.
+
+        A chain is only meaningful with its whole ancestor line (the chain
+        key is ``(parent, block)``), so the walk starts at depth-0 nodes and
+        descends while every page passes ``select`` (default: all). Each
+        record carries the concatenated token blocks and the physical ids in
+        chain order — enough for a peer (or a restarted fabric) to rebuild
+        the exact chain keys via ``register_prefix``. Branching chains emit
+        one record per leaf; shared ancestor pages repeat across records and
+        deduplicate on import through a prefix probe.
+        """
+        ok = (lambda pid: True) if select is None else select
+        out: list[dict] = []
+        roots = [n for n in self._nodes.values()
+                 if n.parent == ROOT and ok(n.phys)]
+        stack = [(n, [], []) for n in sorted(roots, key=lambda n: -n.nid)]
+        while stack:
+            node, toks, phys = stack.pop()
+            toks = toks + list(node.block)
+            phys = phys + [node.phys]
+            kids = [self._nodes[c] for c in node.children
+                    if c in self._nodes and ok(self._nodes[c].phys)]
+            if not kids:
+                out.append({"tokens": toks, "phys": phys})
+                continue
+            stack.extend((k, toks, phys)
+                         for k in sorted(kids, key=lambda n: -n.nid))
+        return out
+
+    def import_chains(self, chains: Sequence[dict], pages_of) -> int:
+        """Re-register exported chains against *this* table. ``pages_of``
+        maps a chain record to its already-materialized physical pages (the
+        importer allocates and fills them first). Idempotent along chains
+        that already exist. Returns pages newly registered."""
+        added = 0
+        for ch in chains:
+            added += self.register_prefix(ch["tokens"], pages_of(ch),
+                                          len(ch["tokens"]))
         return added
 
     # -- copy-on-write ---------------------------------------------------------

@@ -94,6 +94,8 @@ class DomainTelemetry:
     pool it attaches :class:`ClassSloCounters` (``slo``) and swap totals.
     """
 
+    TIER_OPS = ("demote", "promote", "restore")
+
     def __init__(self, domain_names: Sequence[str], ring_capacity: int = 128):
         self.domain_names = list(domain_names)
         n = len(self.domain_names)
@@ -118,6 +120,12 @@ class DomainTelemetry:
         self.spec_drafted = 0        # draft tokens proposed
         self.spec_accepted = 0       # draft tokens accepted
         self.spec_emitted = 0        # tokens emitted by verify steps
+        # persistent tier (DESIGN.md §9): demote = swap slot -> tier,
+        # promote = tier -> fast domain (through the swap forwarding map),
+        # restore = prefix-store re-import into a fresh fabric
+        self.tier_pages = {op: 0 for op in self.TIER_OPS}
+        self.tier_seconds = {op: 0.0 for op in self.TIER_OPS}
+        self.tier_occupancy: dict[str, dict[str, int]] = {}
         self.slo: ClassSloCounters | None = None
 
     # -- event hooks --------------------------------------------------------
@@ -156,6 +164,18 @@ class DomainTelemetry:
         else:
             self.swap_ins += pages
         self.swap_seconds += float(seconds)
+
+    def record_tier(self, op: str, pages: int, seconds: float) -> None:
+        """One persistent-tier transfer (Eq.-1 priced, see bwmodel)."""
+        assert op in self.TIER_OPS, op
+        self.tier_pages[op] += int(pages)
+        self.tier_seconds[op] += float(seconds)
+
+    def record_tier_occupancy(self, tier: str, used: int,
+                              capacity: int) -> None:
+        """Gauge: pages resident in one placement tier right now."""
+        self.tier_occupancy[tier] = {"used": int(used),
+                                     "capacity": int(capacity)}
 
     def record_spec(self, drafted: int, accepted: int,
                     emitted: int) -> None:
@@ -207,6 +227,13 @@ class DomainTelemetry:
                 "emitted": self.spec_emitted,
                 "acceptance_rate": (self.spec_accepted
                                     / max(self.spec_drafted, 1)),
+            },
+            "tiers": {
+                "ops": {op: {"pages": self.tier_pages[op],
+                             "seconds": self.tier_seconds[op]}
+                        for op in self.TIER_OPS},
+                "occupancy": {k: dict(v)
+                              for k, v in self.tier_occupancy.items()},
             },
         }
         if self.slo is not None:

@@ -418,12 +418,14 @@ class RequestScheduler:
                 continue
             if self._slots_used() >= self.max_batch:
                 break
-            # only parked pages re-allocate; pinned shared pages never left
-            need = (self.swap.parked_count(r.pages)
+            # promotable footprint re-allocates: pages parked in slots AND
+            # pages demoted to the persistent tier; pinned shared pages
+            # never left
+            need = (self.swap.promotable_count(r.pages)
                     + self._seq_growth(r.length, r.pages)
                     + self._growth_need(self.running))
             if self.conservative_admission:
-                need = max(need, self.swap.parked_count(r.pages)
+                need = max(need, self.swap.promotable_count(r.pages)
                            + self._future_pages(r)
                            + self._admitted_future())
             if self.view.free_count() < need:
@@ -568,5 +570,7 @@ class RequestScheduler:
             "finished": len(self.finished),
             "swap_slots_free": (self.swap.slots_free()
                                 if self.swap else 0),
+            "demoted_pages": (self.swap.demoted_count()
+                              if self.swap else 0),
             "slo": self.slo.summary(self.now),
         }

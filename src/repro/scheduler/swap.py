@@ -72,7 +72,17 @@ class KVSwapManager:
         self._borrowed: set[int] = set()   # slots on loan from co-tenants
         self._lent: set[int] = set()       # own slots currently loaned out
         self._moved: dict[int, int] = {}   # parked-page forwarding (vacate)
+        self._demoted: set[int] = set()    # tier handles (persist demotion)
+        self._park_order: dict[int, int] = {}   # slot -> park stamp (cold)
+        self._park_stamp = 0
         self.view.offer_slots(self)
+
+    @property
+    def persist(self):
+        """The fabric's persistent tier, if one is attached — looked up
+        live so a tier attached after this manager was built still counts
+        as demotion headroom."""
+        return self.view.fabric.persist
 
     # -- capacity ------------------------------------------------------------
 
@@ -81,19 +91,36 @@ class KVSwapManager:
 
     def can_swap_out(self, num_pages: int) -> bool:
         """Counts slots in hand plus what the loan broker could actually
-        deliver: borrowable idle co-tenant slots in *this tenant's* slow
-        domains and instantly-recallable slots this tenant has on loan."""
+        deliver — borrowable idle co-tenant slots in *this tenant's* slow
+        domains and instantly-recallable slots this tenant has on loan —
+        plus slots the persistent tier could vacate by demoting the
+        coldest parked pages."""
         avail = self.slots_free()
         if self.borrow:
             avail += self.view.borrowable()
         if self._lent:
             avail += self.view.recallable()
+        if self.persist is not None:
+            avail += min(len(self._out), self.persist.capacity_left())
         return avail >= num_pages
 
     def parked_count(self, page_ids) -> int:
         """How many of a view's pages currently sit in reserved slots (the
         ones swap-in must re-allocate; pinned shared pages never parked)."""
         return sum(1 for p in page_ids if self._resolve(p) in self._out)
+
+    def promotable_count(self, page_ids) -> int:
+        """Pages swap-in must re-allocate: parked in reserved slots *plus*
+        demoted into the persistent tier — admission sizes a swapped
+        sequence's resume footprint with this, not ``parked_count``."""
+        n = 0
+        for p in page_ids:
+            q = self._resolve(p)
+            n += q in self._out or q in self._demoted
+        return n
+
+    def demoted_count(self) -> int:
+        return len(self._demoted)
 
     def _resolve(self, pid: int) -> int:
         """Chase the forwarding chain of a parked page that a loan reclaim
@@ -103,9 +130,10 @@ class KVSwapManager:
         return pid
 
     def _ensure_slots(self, n: int) -> float:
-        """Make ``n`` slots available, borrowing from co-tenants and
-        recalling own loans as needed. Returns the Eq.-1 seconds spent
-        vacating recalled slots (charged to this swap-out)."""
+        """Make ``n`` slots available, borrowing from co-tenants,
+        recalling own loans, and finally demoting the coldest parked pages
+        into the persistent tier. Returns the Eq.-1 seconds spent vacating
+        recalled slots and demoting (charged to this swap-out)."""
         seconds = 0.0
         short = n - self.slots_free()
         if short > 0 and self.borrow:
@@ -113,7 +141,35 @@ class KVSwapManager:
         if short > 0 and self._lent:
             _, secs = self.view.recall_loans(short)
             seconds += secs
+        short = n - self.slots_free()
+        if short > 0 and self.persist is not None:
+            _, secs = self.demote_cold(short)
+            seconds += secs
         return seconds
+
+    def demote_cold(self, n: int) -> tuple[int, float]:
+        """Vacate up to ``n`` reserved slots by demoting the
+        longest-parked (coldest) pages into the persistent tier. Eq.-1
+        priced through the tier's bandwidth row; the freed slots rejoin
+        the reservation and the forwarding map chases slot -> handle, so
+        a later ``swap_in`` promotes transparently. Returns
+        ``(pages_demoted, seconds)``."""
+        tier = self.persist
+        if tier is None or not self._out or n <= 0:
+            return 0, 0.0
+        n = min(n, len(self._out), tier.capacity_left())
+        if n <= 0:
+            return 0, 0.0
+        cold = sorted(self._out,
+                      key=lambda p: self._park_order.get(p, 0))[:n]
+        handles, seconds = tier.demote(self.view, cold)
+        for p, h in zip(cold, handles):
+            self._out.discard(p)
+            self._park_order.pop(p, None)
+            self.slots[self.view.domain_of(p)].append(int(p))
+            self._moved[p] = h
+            self._demoted.add(h)
+        return len(cold), seconds
 
     # -- loan-broker provider protocol (fabric calls these) --------------------
 
@@ -196,6 +252,8 @@ class KVSwapManager:
                     self._out.discard(s)
                     self._out.add(t)
                     self._moved[s] = t
+                    if s in self._park_order:
+                        self._park_order[t] = self._park_order.pop(s)
                     returned.append(s)
                 seconds = self._transfer_seconds(
                     [self.view.domain_of(s) for s in src],
@@ -219,8 +277,14 @@ class KVSwapManager:
             q = self._forward(p)         # retire the chain: the slot may
             if q in self._out:           # be re-lent and re-parked later
                 self._out.discard(q)
+                self._park_order.pop(q, None)
                 self.slots[self.view.domain_of(q)].append(int(q))
                 self.view.drop_parked_ref(q)
+            elif q in self._demoted:     # died cold: drop the tier bytes
+                self._demoted.discard(q)
+                self.view.drop_parked_ref(q)
+                if q not in self.view.table.ref:
+                    self.persist.forget(q)
             else:
                 live.append(q)
         return live
@@ -232,6 +296,7 @@ class KVSwapManager:
         the allocator. Requires no parked KV — swap sequences in or
         ``release_parked`` them first."""
         assert not self._out, "close() with parked KV still in slots"
+        assert not self._demoted, "close() with KV still in the tier"
         self.view.settle_loans()
         for d in list(self.slots):
             for p in self.slots[d]:
@@ -290,6 +355,9 @@ class KVSwapManager:
         self.view.park_pages(movable, dst)
         moved = dict(zip(movable, dst))
         self._out.update(dst)
+        for p in dst:                      # park order drives cold demotion
+            self._park_stamp += 1
+            self._park_order[p] = self._park_stamp
         seconds = self._transfer_seconds(src_doms, dst_doms) + loan_seconds
         self.view.telemetry.record_swap("out", n, seconds)
         return [moved.get(p, p) for p in page_ids], seconds
@@ -297,26 +365,38 @@ class KVSwapManager:
     def swap_in(self, page_ids: list[int],
                 table=None) -> tuple[list[int], float]:
         """Bring parked pages back through the view's live placement
-        policy; vacated slots rejoin the reservation. Pages of the view
-        that never parked (pinned shared pages) pass through untouched.
-        Caller guarantees the view has enough allocatable pages (the
-        scheduler checks against the parked count)."""
+        policy; vacated slots rejoin the reservation. Pages that demoted
+        to the persistent tier promote back through the same forwarding
+        map, bit-exactly. Pages of the view that never parked (pinned
+        shared pages) pass through untouched. Caller guarantees the view
+        has enough allocatable pages (the scheduler checks against the
+        promotable count)."""
         assert table is None or table is self.view.table, \
             "swap rides the fabric view's own page table"
         page_ids = [self._forward(p) for p in page_ids]
         parked = [p for p in page_ids if p in self._out]
-        n = len(parked)
-        if n == 0:
+        demoted = [p for p in page_ids if p in self._demoted]
+        if not parked and not demoted:
             return list(page_ids), 0.0
-        src_doms = [self.view.domain_of(p) for p in parked]
-        dst = self.view.unpark_pages(parked)
-        dst_doms = [self.view.domain_of(p) for p in dst]
-        moved = dict(zip(parked, dst))
-        for pid in parked:
-            self._out.discard(pid)
-            self.slots[self.view.domain_of(pid)].append(int(pid))
-        seconds = self._transfer_seconds(src_doms, dst_doms)
-        self.view.telemetry.record_swap("in", n, seconds)
+        moved: dict[int, int] = {}
+        seconds = 0.0
+        if parked:
+            src_doms = [self.view.domain_of(p) for p in parked]
+            dst = self.view.unpark_pages(parked)
+            dst_doms = [self.view.domain_of(p) for p in dst]
+            moved.update(zip(parked, dst))
+            for pid in parked:
+                self._out.discard(pid)
+                self._park_order.pop(pid, None)
+                self.slots[self.view.domain_of(pid)].append(int(pid))
+            secs = self._transfer_seconds(src_doms, dst_doms)
+            self.view.telemetry.record_swap("in", len(parked), secs)
+            seconds += secs
+        if demoted:
+            dst, secs = self.persist.promote(self.view, demoted)
+            moved.update(zip(demoted, dst))
+            self._demoted.difference_update(demoted)
+            seconds += secs
         return [moved.get(p, p) for p in page_ids], seconds
 
     def _forward(self, pid: int) -> int:

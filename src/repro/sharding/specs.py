@@ -200,6 +200,19 @@ def cache_leaf_sharding(cfg: ModelConfig, mesh, path, leaf):
     return NamedSharding(mesh, P(*(None,) * len(shape)))
 
 
+def kv_pool_spec(cfg: ModelConfig, mesh, page_size: int) -> P:
+    """Layout spec for a paged KV pool ``[L, pages, page_size, nkv, hd]``.
+
+    KV heads shard over 'model' when they divide; the page axis stays
+    replicated — the page table, not GSPMD, is the placement mechanism
+    there. This is the layout metadata a fabric stamps onto peer page-range
+    exports (persistence tier, DESIGN.md §9) so an importer can check the
+    bytes were produced under a compatible sharding.
+    """
+    shape = (cfg.num_layers, 1, page_size, cfg.num_kv_heads, cfg.head_dim_)
+    return _fit(mesh, shape, (None, None, None, "model", None))
+
+
 # ---------------------------------------------------------------------------
 # ZeRO-1 optimizer-state sharding
 # ---------------------------------------------------------------------------
