@@ -4,30 +4,47 @@ so two runs on the same seed diff clean.
 
 Every suite calls :func:`dump` for its gate-carrying result table;
 :func:`check` is the CI tripwire that fails the build when an expected
-artifact is missing or unparseable:
+artifact is missing, unparseable, missing its schema's required top-level
+keys, or contains a non-finite number (NaN/Infinity serialize as JSON but
+poison every downstream comparison):
 
-    PYTHONPATH=src python -m benchmarks.artifacts          # check all
-    PYTHONPATH=src python -m benchmarks.artifacts BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.artifacts check            # all
+    PYTHONPATH=src python -m benchmarks.artifacts check BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.artifacts                  # = check
 """
 
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
-# the full artifact contract: benchmarks.run and CI both end by asserting
-# each of these exists at the repo root and parses as JSON
-EXPECTED = (
-    "BENCH_placement.json",   # placement_bench: executor vs floor
-    "BENCH_scheduler.json",   # scheduler_bench.compare: swap placement
-    "BENCH_prefix.json",      # scheduler_bench.prefix_compare
-    "BENCH_fabric.json",      # scheduler_bench.fabric_compare
-    "BENCH_persist.json",     # scheduler_bench.persist_compare
-    "BENCH_serve.json",       # serve_bench.speculative_compare
-)
+# the full artifact contract: required top-level keys per artifact.
+# benchmarks.run and CI both end by validating each of these.
+SCHEMAS: dict[str, tuple[str, ...]] = {
+    # placement_bench: executor vs per-page floor
+    "BENCH_placement.json": ("alloc", "migration", "policies"),
+    # scheduler_bench.compare: swap placement policies
+    "BENCH_scheduler.json": ("bwap_canonical", "local_first", "uniform"),
+    # scheduler_bench.prefix_compare
+    "BENCH_prefix.json": ("footprint_reduction", "reuse_off", "reuse_on"),
+    # scheduler_bench.fabric_compare
+    "BENCH_fabric.json": ("best_effort_goodput_ratio", "fabric",
+                          "isolated"),
+    # scheduler_bench.persist_compare
+    "BENCH_persist.json": ("warm", "cold", "oracle",
+                           "ttft_cold_over_warm", "token_identical"),
+    # serve_bench.speculative_compare
+    "BENCH_serve.json": ("greedy", "speculative", "decode_step_ratio",
+                         "token_identical"),
+    # obs_bench.suite: calibration loop + tracing overhead
+    "BENCH_obs.json": ("calibration", "overhead"),
+}
+
+EXPECTED = tuple(SCHEMAS)
 
 
 def dump(name: str, data) -> pathlib.Path:
@@ -41,24 +58,59 @@ def dump(name: str, data) -> pathlib.Path:
     return path
 
 
-def check(names=EXPECTED) -> None:
+def _non_finite(value, path: str) -> list[str]:
+    """Walk a parsed JSON value; return the paths of non-finite floats
+    (json.loads admits NaN/Infinity, downstream diffs must not)."""
+    if isinstance(value, bool):
+        return []
+    if isinstance(value, float) and not math.isfinite(value):
+        return [path]
+    if isinstance(value, dict):
+        return [p for k, v in value.items()
+                for p in _non_finite(v, f"{path}.{k}")]
+    if isinstance(value, list):
+        return [p for i, v in enumerate(value)
+                for p in _non_finite(v, f"{path}[{i}]")]
+    return []
+
+
+def check(names=EXPECTED, root: pathlib.Path = ROOT) -> None:
     """Fail (SystemExit) unless every named artifact exists at the repo
-    root and round-trips through json.loads."""
-    missing = [n for n in names if not (ROOT / n).is_file()]
+    root, round-trips through json.loads, carries its schema's required
+    top-level keys, and contains only finite numbers."""
+    root = pathlib.Path(root)
+    missing = [n for n in names if not (root / n).is_file()]
     if missing:
         raise SystemExit(
-            f"missing benchmark artifacts at {ROOT}: {', '.join(missing)}")
-    broken = []
+            f"missing benchmark artifacts at {root}: {', '.join(missing)}")
+    errors: list[str] = []
     for n in names:
         try:
-            json.loads((ROOT / n).read_text())
-        except ValueError:
-            broken.append(n)
-    if broken:
-        raise SystemExit(
-            f"unparseable benchmark artifacts: {', '.join(broken)}")
-    print(f"[artifacts OK — {len(names)} present at {ROOT}]")
+            data = json.loads((root / n).read_text())
+        except ValueError as e:
+            errors.append(f"{n}: unparseable ({e})")
+            continue
+        required = SCHEMAS.get(n, ())
+        if required and not isinstance(data, dict):
+            errors.append(f"{n}: expected a JSON object, got "
+                          f"{type(data).__name__}")
+            continue
+        absent = [k for k in required if k not in data]
+        if absent:
+            errors.append(f"{n}: missing required keys "
+                          f"{', '.join(absent)}")
+        bad = _non_finite(data, n)
+        if bad:
+            errors.append(f"{n}: non-finite numbers at "
+                          f"{', '.join(bad[:5])}")
+    if errors:
+        raise SystemExit("benchmark artifact check failed:\n  "
+                         + "\n  ".join(errors))
+    print(f"[artifacts OK — {len(names)} checked at {root}]")
 
 
 if __name__ == "__main__":
-    check(tuple(sys.argv[1:]) or EXPECTED)
+    argv = sys.argv[1:]
+    if argv and argv[0] == "check":
+        argv = argv[1:]
+    check(tuple(argv) or EXPECTED)

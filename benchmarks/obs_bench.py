@@ -1,0 +1,245 @@
+"""Observability benchmark: calibration-loop convergence + tracing
+overhead (DESIGN.md §10). Emits BENCH_obs.json (benchmarks.artifacts).
+
+Two gates:
+
+1. **Calibration loop.** The pool's analytic bandwidth profile is planted
+   *wrong* (one slow domain 2x optimistic, another 2x pessimistic); a
+   drift-ledger probe supplies per-domain measured transfer times from
+   the ground-truth bandwidths (standing in for hardware counters). The
+   ledger stages seconds-per-page samples and feeds ``fabric.calibrate``
+   — after the run, ``bw_effective`` must sit within 10% of ground truth
+   on every domain that carried traffic. Before calibration the planted
+   error is 100%, so the gate proves the loop, not the initial profile.
+
+2. **Tracing overhead.** The scheduler-bench workload runs with the full
+   observatory (tracer + metrics + heat) and without; the traced run must
+   cost <5% extra wall time and produce token-identical outputs. Runs are
+   interleaved and best-of-N to shed host noise; the drift probe is off
+   in both so the virtual clock — and therefore the schedule — is
+   bit-identical.
+
+Run: PYTHONPATH=src python -m benchmarks.obs_bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import artifacts
+from benchmarks.scheduler_bench import _domains, run_config
+from repro.configs import registry
+from repro.core.dwp import DWPConfig
+from repro.models.lm import LM
+from repro.obs import Observatory
+from repro.scheduler import (KVSwapManager, PriorityClass, RequestScheduler,
+                             SloSpec, WorkloadSpec, generate)
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import BwapPagePool, MemoryDomain
+
+# ground truth the probe measures against; the profile handed to the pool
+# is planted wrong on the slow domains (hbm_peer 2x optimistic, host_dram
+# 2x pessimistic) so the calibration loop has a real 100% error to close
+BW_PROFILE = {"hbm_local": 819.0, "hbm_peer_1hop": 0.0025,
+              "host_dram": 0.0004}
+BW_TRUE = {"hbm_local": 819.0, "hbm_peer_1hop": 0.00125,
+           "host_dram": 0.0008}
+CAL_TOL = 0.10
+OVERHEAD_TOL = 0.05
+MIN_SAMPLES = 5          # a domain needs this many probe samples to gate
+
+
+def _model():
+    cfg = dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                              num_layers=1, compute_dtype="float32")
+    model = LM(cfg)
+    return cfg, model.init(jax.random.PRNGKey(0))
+
+
+def calibration_loop(seed: int = 0, check: bool = True) -> dict:
+    cfg, params = _model()
+    names = list(BW_PROFILE)
+    domains = [
+        MemoryDomain(names[0], 10, BW_PROFILE[names[0]], True),
+        MemoryDomain(names[1], 24, BW_PROFILE[names[1]], False),
+        MemoryDomain(names[2], 60, BW_PROFILE[names[2]], False),
+    ]
+    pool = BwapPagePool(cfg, domains, page_size=4,
+                        dwp_config=DWPConfig(n=10 ** 6, c=1))
+    bw_true = np.asarray([BW_TRUE[n] for n in names])
+    bw_profile = np.asarray([BW_PROFILE[n] for n in names])
+
+    def probe(kind, bytes_per_domain):
+        # "hardware counters": per-domain seconds under the true bandwidths
+        return np.asarray(bytes_per_domain) / (bw_true * 1e9)
+
+    swap = KVSwapManager(pool, placement="bwap_canonical",
+                         reserve_fraction=0.9)
+    sched = RequestScheduler(pool, max_batch=4, prefill_token_budget=32,
+                             default_max_new=12, swap=swap)
+    eng = ServeEngine(cfg, params, pool, scheduler=sched,
+                      wall_clock=False, sim_step_s=0.01)
+    obs = Observatory(pool, tracer=False, heat=False, probe=probe,
+                      calibrate_every=2)
+    trace = generate(WorkloadSpec(
+        kind="poisson", num_requests=10, mean_interarrival_s=0.004,
+        prompt_mean=14, prompt_max=28, max_new=12,
+        vocab_size=cfg.vocab_size, seed=seed))
+    for t in trace:
+        eng.submit(t.prompt, max_new=t.max_new, arrival_s=t.arrival_s)
+    steps = 0
+    while (eng.active or eng.waiting) and steps < 1500:
+        eng.step()
+        steps += 1
+
+    s = obs.drift.summary()
+    bw_eff = np.asarray(s["bw_effective_gbps"])
+    rel_err = np.abs(bw_eff - bw_true) / bw_true
+    err_before = np.abs(bw_profile - bw_true) / bw_true
+    gated = [i for i in range(len(names))
+             if s["domain_samples"][i] >= MIN_SAMPLES]
+    row = {
+        "domains": names,
+        "bw_profile_gbps": [float(b) for b in bw_profile],
+        "bw_true_gbps": [float(b) for b in bw_true],
+        "bw_effective_gbps": [float(b) for b in bw_eff],
+        "rel_err_before": [float(e) for e in err_before],
+        "rel_err_after": [float(e) for e in rel_err],
+        "gated_domains": [names[i] for i in gated],
+        "observations": s["observations"],
+        "calibrations": s["calibrations"],
+        "domain_samples": s["domain_samples"],
+        "ratio_p50": s["kinds"]["batch_read"]["ratio_p50"],
+        "ratio_p95": s["kinds"]["batch_read"]["ratio_p95"],
+        "finished": len(eng.finished),
+        "requests": len(trace),
+        "tolerance": CAL_TOL,
+    }
+    print(f"calibration: {s['calibrations']} calibrations over "
+          f"{s['observations']} observations, {len(eng.finished)}/"
+          f"{len(trace)} requests")
+    for i, n in enumerate(names):
+        mark = "gated" if i in gated else f"{s['domain_samples'][i]} samples"
+        print(f"  {n:14s} profile {bw_profile[i]:.5g} true {bw_true[i]:.5g} "
+              f"-> effective {bw_eff[i]:.5g} GB/s  err "
+              f"{err_before[i]:.0%} -> {rel_err[i]:.2%}  ({mark})")
+    if check:
+        assert len(eng.finished) == len(trace), "calibration run failed"
+        # both planted-skew domains must have carried enough traffic to
+        # gate — otherwise the bench proves nothing
+        assert {names[1], names[2]} <= set(row["gated_domains"]), \
+            f"planted domains not exercised: {row['gated_domains']}"
+        for i in gated:
+            assert err_before[i] <= CAL_TOL or rel_err[i] < err_before[i], \
+                f"{names[i]}: calibration made the error worse"
+            assert rel_err[i] <= CAL_TOL, \
+                (f"{names[i]}: bw_effective {bw_eff[i]:.5g} not within "
+                 f"{CAL_TOL:.0%} of ground truth {bw_true[i]:.5g} "
+                 f"(err {rel_err[i]:.1%})")
+    return row
+
+
+def _overhead_run(cfg, params, trace, *, with_obs: bool):
+    """One scheduler-bench-shaped run; returns (wall_s, tokens, obs)."""
+    pool = BwapPagePool(cfg, _domains(), page_size=4,
+                        dwp_config=DWPConfig(n=10 ** 6, c=1))
+    swap = KVSwapManager(pool, placement="bwap_canonical",
+                         reserve_fraction=0.95)
+    sched = RequestScheduler(
+        pool, max_batch=6, prefill_token_budget=32,
+        classes=[PriorityClass("interactive", 2,
+                               SloSpec(ttft_s=0.3, tpot_s=0.03)),
+                 PriorityClass("batch", 0,
+                               SloSpec(ttft_s=1.5, tpot_s=0.06))],
+        default_class="batch", default_max_new=16, swap=swap)
+    eng = ServeEngine(cfg, params, pool, scheduler=sched,
+                      wall_clock=False, sim_step_s=0.005)
+    # no drift probe: the virtual clock (and thus the schedule) must be
+    # bit-identical with and without the observatory
+    obs = Observatory(pool, drift=False) if with_obs else None
+    for t in trace:
+        eng.submit(t.prompt, cls=t.cls, max_new=t.max_new,
+                   arrival_s=t.arrival_s)
+    t0 = time.monotonic()
+    steps = 0
+    while (eng.active or eng.waiting) and steps < 3000:
+        eng.step()
+        steps += 1
+    wall = time.monotonic() - t0
+    tokens = [tuple(s.tokens) for s in sorted(eng.finished,
+                                              key=lambda s: s.sid)]
+    return wall, tokens, obs
+
+
+def overhead(seed: int = 0, repeats: int = 3, check: bool = True) -> dict:
+    cfg, params = _model()
+    trace = generate(WorkloadSpec(
+        kind="bursty", num_requests=10, mean_interarrival_s=0.01,
+        prompt_mean=24, prompt_max=40, max_new=16,
+        vocab_size=cfg.vocab_size,
+        class_mix=(("interactive", 0.25), ("batch", 0.75)), seed=seed))
+    _overhead_run(cfg, params, trace, with_obs=False)   # warm jit caches
+    base, traced = [], []
+    tokens_base = tokens_traced = obs = None
+    for _ in range(repeats):                            # interleaved pairs
+        w, tokens_base, _n = _overhead_run(cfg, params, trace,
+                                           with_obs=False)
+        base.append(w)
+        w, tokens_traced, obs = _overhead_run(cfg, params, trace,
+                                              with_obs=True)
+        traced.append(w)
+    best_base, best_traced = min(base), min(traced)
+    pct = (best_traced - best_base) / best_base * 100.0
+    identical = tokens_base == tokens_traced
+    tracer = obs.tracer
+    preempted = sorted({e["tid"] - 1 for e in tracer.spans("swap_out")})
+    span_counts = {n: len(tracer.spans(n))
+                   for n in ("admit", "queued", "prefill", "decode",
+                             "swap_out", "swap_in", "finish")}
+    row = {
+        "base_s": best_base, "traced_s": best_traced,
+        "overhead_pct": pct, "token_identical": identical,
+        "trace_events": len(tracer.events),
+        "span_counts": span_counts,
+        "preempted_requests": preempted,
+        "heat_live_pages": obs.heat.live_pages(),
+        "repeats": repeats, "tolerance_pct": OVERHEAD_TOL * 100.0,
+    }
+    print(f"overhead: base {best_base * 1e3:.0f} ms, traced "
+          f"{best_traced * 1e3:.0f} ms ({pct:+.2f}%; best of {repeats}); "
+          f"{row['trace_events']} trace events, token_identical="
+          f"{identical}")
+    print("  spans: " + " ".join(f"{k}={v}"
+                                 for k, v in span_counts.items()))
+    if check:
+        assert identical, "tracing changed the decoded tokens"
+        assert pct < OVERHEAD_TOL * 100.0, \
+            f"tracing overhead {pct:.2f}% exceeds {OVERHEAD_TOL:.0%}"
+        assert preempted, "workload produced no preemption to trace"
+        sid = preempted[0]
+        for name in ("admit", "prefill", "decode", "swap_out", "swap_in",
+                     "finish"):
+            assert tracer.spans(name, sid=sid), \
+                f"preempted request {sid} missing {name!r} span"
+    return row
+
+
+def suite(seed: int = 0, check: bool = True) -> dict:
+    cal = calibration_loop(seed=seed, check=check)
+    ov = overhead(seed=seed, check=check)
+    out = {"calibration": cal, "overhead": ov}
+    artifacts.dump("BENCH_obs.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-check", action="store_true")
+    args = ap.parse_args()
+    suite(seed=args.seed, check=not args.no_check)

@@ -148,6 +148,13 @@ def main() -> None:
     # decode steps saved, prefill forward tokens).
     serve_bench.speculative_compare(seed=args.seed, check=False)
 
+    _hdr("Observatory — Eq.-1 calibration loop + tracing overhead")
+    from benchmarks import obs_bench
+    # check=False: the sweep accepts arbitrary --seed values; the hard
+    # convergence + <5%-overhead gates run on the benchmark's own (CI)
+    # entry point. Emits BENCH_obs.json.
+    obs_bench.suite(seed=args.seed, check=False)
+
     _hdr("Placement runtime microbenchmarks (migration executor floor)")
     from benchmarks import placement_bench
     placement_bench.suite(pages=1024)

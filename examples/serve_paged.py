@@ -13,6 +13,12 @@ selection; the run ends with a per-class SLO summary.
 system preamble, export it to the on-disk prefix store, tear the whole
 fabric down, and re-import into a fresh engine — the first request after
 the "restart" hits the restored trie instead of re-prefilling.
+
+``--trace-out PATH`` attaches the fabric observatory (DESIGN.md §10) and
+dumps the run as Chrome/Perfetto trace-event JSON: open ui.perfetto.dev,
+"Open trace file", pick the JSON — one track per request (admit, queued,
+prefill chunks, decode steps, swap_out/swap_in) on the virtual clock.
+Tracing never changes the decoded tokens.
 """
 
 import argparse
@@ -111,6 +117,9 @@ def main():
     ap.add_argument("--restart-demo", action="store_true",
                     help="run the persistence-tier restart walkthrough "
                          "(prefix store export -> teardown -> re-import)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="dump a Chrome/Perfetto trace-event JSON of the "
+                         "run (load it in ui.perfetto.dev)")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
@@ -149,6 +158,10 @@ def main():
         drafter = PromptLookupDrafter(max_tokens=args.spec, max_ngram=3)
     eng = ServeEngine(cfg, params, pool, scheduler=sched, wall_clock=False,
                       sim_step_s=0.02, drafter=drafter)
+    obs = None
+    if args.trace_out:
+        from repro.obs import Observatory
+        obs = Observatory(pool, drift=False)
 
     trace = generate(WorkloadSpec(
         kind=args.kind, num_requests=args.requests,
@@ -221,6 +234,14 @@ def main():
     for s in eng.finished[:3]:
         print(f"  seq {s.sid} [{s.cls}]: {s.tokens[:5]}... -> "
               f"{s.tokens[s.prompt_len:s.prompt_len + 5]}...")
+    if obs is not None:
+        path = obs.tracer.export(args.trace_out)
+        spans = {n: len(obs.tracer.spans(n))
+                 for n in ("prefill", "decode", "swap_out", "swap_in")}
+        print(f"\ntrace: {len(obs.tracer.events)} events -> {path} "
+              f"({' '.join(f'{k}={v}' for k, v in spans.items())}); "
+              f"open ui.perfetto.dev -> 'Open trace file' to view "
+              f"(one track per request, virtual-clock timestamps)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,195 @@
+"""The fabric observatory: one object wiring tracer + metrics + drift
+ledger + heat map into a fabric (DESIGN.md §10).
+
+Construction subscribes to every fabric event and registers the
+observatory on the fabric (``fabric.attach_obs``), from where the
+scheduler, engine, and swap manager find it via ``view.fabric.obs`` —
+no plumbing through constructors, and a fabric without an observatory
+pays one ``is None`` check per hook site.
+
+    obs = Observatory(pool)                  # or a fabric, or a view
+    ... run the engine ...
+    obs.tracer.export("trace.json")          # load in ui.perfetto.dev
+    print(obs.metrics.prometheus_text())
+    obs.drift.summary()                      # Eq.-1 drift + calibration
+
+``probe`` (optional) supplies *measured* transfer times for the drift
+ledger: called as ``probe(kind, bytes_per_domain)`` with kind in
+``repro.obs.drift.KINDS``; return a scalar (total seconds), a per-domain
+vector of seconds, or None to skip. On real NUMA hardware this is where
+perf counters plug in; benchmarks use it to plant ground-truth latencies.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.obs.drift import DriftLedger
+from repro.obs.heat import PageHeat
+from repro.obs.trace import SpanTracer
+
+
+def _resolve_fabric(target):
+    if hasattr(target, "pool") and hasattr(target, "emit"):
+        return target                          # MemoryFabric
+    if hasattr(target, "fabric"):
+        return target.fabric                   # FabricView
+    from repro.placement.fabric import as_view
+    return as_view(target).fabric              # bare BwapPagePool
+
+
+class Observatory:
+    def __init__(self, target, *, tracer: bool = True, heat: bool = True,
+                 drift: bool = True, probe=None, calibrate_every: int = 4,
+                 heat_decay: float = 0.9):
+        self.fabric = _resolve_fabric(target)
+        self.metrics = self.fabric.telemetry.metrics
+        self.tracer = SpanTracer() if tracer else None
+        self.heat = PageHeat(self.fabric.pool, decay=heat_decay) if heat \
+            else None
+        self.drift = DriftLedger(self.fabric,
+                                 calibrate_every=calibrate_every) \
+            if drift else None
+        self.probe = probe
+        self._last_now: dict[str, float] = {}
+        m = self.metrics
+        self._events = m.counter(
+            "repro_fabric_events_total",
+            "Fabric bus events seen by the observatory.", ("event",))
+        self._page_events = m.counter(
+            "repro_page_events_total",
+            "Page alloc/free events by tenant view and domain.",
+            ("event", "view", "domain"))
+        self._migrations = m.counter(
+            "repro_obs_migrations_total",
+            "Single-page migrations seen on the bus, by view.", ("view",))
+        self._shares = m.counter(
+            "repro_share_events_total",
+            "Cross-tenant share events by kind (prefix/loan/reclaim).",
+            ("kind",))
+        self._tier_ops = m.counter(
+            "repro_obs_tier_pages_total",
+            "Pages moved by tier ops seen on the bus.", ("op", "view"))
+        self._latency_hist = m.histogram(
+            "repro_step_latency_seconds",
+            "Per-step latency samples by tenant view.", ("view",))
+        self._requests = m.counter(
+            "repro_requests_total",
+            "Request lifecycle transitions by view and priority class.",
+            ("event", "view", "cls"))
+        for ev in self.fabric._subs:
+            self.fabric.subscribe(ev, self._bus_handler(ev))
+        self.fabric.attach_obs(self)
+
+    # -- virtual clock --------------------------------------------------------
+
+    def _note_now(self, view: str, now: float) -> None:
+        self._last_now[view] = float(now)
+
+    def _now(self, view: str | None) -> float:
+        if view in self._last_now:
+            return self._last_now[view]
+        return max(self._last_now.values(), default=0.0)
+
+    # -- fabric event bus -----------------------------------------------------
+
+    def _bus_handler(self, event: str):
+        def handle(**kw):
+            self._events.labels(event).inc()
+            view = kw.get("view")
+            if event in ("alloc", "free"):
+                dom = self.fabric.pool.domains[kw["domain"]].name
+                self._page_events.labels(event, view or "", dom).inc()
+                if event == "free" and self.heat is not None:
+                    self.heat.on_free(page=kw["page"])
+            elif event == "migrate":
+                self._migrations.labels(view).inc()
+            elif event == "share":
+                self._shares.labels(kw["kind"]).inc()
+            elif event == "latency":
+                self._latency_hist.labels(view).observe(kw["seconds"])
+            elif event in ("demote", "promote", "restore"):
+                self._tier_ops.labels(event, view).inc(kw["pages"])
+                if self.tracer is not None:
+                    self.tracer.on_fabric(
+                        event, view, self._now(view),
+                        dur_s=kw.get("seconds", 0.0),
+                        args={"pages": kw["pages"]})
+        return handle
+
+    # -- scheduler lifecycle hooks -------------------------------------------
+
+    def on_admit(self, view, r, now: float) -> None:
+        self._note_now(view.name, now)
+        self._requests.labels("admit", view.name, r.cls).inc()
+        if self.tracer is not None:
+            self.tracer.on_admit(view.name, r.sid, r.arrival_s, r.cls)
+
+    def on_preempt(self, view, r, now: float, seconds: float,
+                   pages: int) -> None:
+        self._note_now(view.name, now)
+        self._requests.labels("preempt", view.name, r.cls).inc()
+        if self.tracer is not None:
+            self.tracer.on_swap_out(view.name, r.sid, now, seconds, pages)
+
+    def on_resume(self, view, r, now: float, seconds: float) -> None:
+        self._note_now(view.name, now)
+        self._requests.labels("resume", view.name, r.cls).inc()
+        if self.tracer is not None:
+            self.tracer.on_swap_in(view.name, r.sid, now, seconds)
+
+    def on_finish(self, view, r, now: float) -> None:
+        self._note_now(view.name, now)
+        self._requests.labels("finish", view.name, r.cls).inc()
+        if self.tracer is not None:
+            self.tracer.on_finish(view.name, r.sid, now, r.produced)
+
+    # -- engine step hook -----------------------------------------------------
+
+    def on_engine_step(self, view, plan, batch, read_pages,
+                       predicted_s: float, t0: float, dt: float) -> None:
+        """One engine step just advanced the clock from ``t0`` by ``dt``:
+        trace spans for its prefill chunks and decode batch, touch heat,
+        and (with a probe) feed the drift ledger the batch-read pair."""
+        self._note_now(view.name, t0 + dt)
+        if self.heat is not None:
+            if read_pages:
+                self.heat.touch(read_pages)
+            self.heat.step()
+        if self.tracer is not None:
+            for seq, lo, hi in plan.prefill_chunks:
+                self.tracer.on_prefill(view.name, seq.sid, t0, dt, lo, hi)
+            for seq in batch:
+                self.tracer.on_decode(view.name, seq.sid, t0, dt,
+                                      seq.produced)
+        if self.drift is not None and self.probe is not None and batch:
+            bpd = view.footprint(read_pages)
+            measured = self.probe("batch_read", bpd)
+            if measured is not None:
+                self.drift.observe("batch_read", bpd, predicted_s,
+                                   measured)
+
+    # -- swap transfer hook ---------------------------------------------------
+
+    def observe_transfer(self, bytes_per_domain,
+                         predicted_s: float) -> None:
+        if self.drift is None or self.probe is None:
+            return
+        bpd = np.asarray(bytes_per_domain, dtype=np.float64)
+        if not bpd.any():
+            return
+        measured = self.probe("swap_transfer", bpd)
+        if measured is not None:
+            self.drift.observe("swap_transfer", bpd, predicted_s, measured)
+
+    # -- reporting ------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        out = {"metrics": self.metrics.snapshot()}
+        if self.drift is not None:
+            out["drift"] = self.drift.summary()
+        if self.heat is not None:
+            out["heat"] = self.heat.snapshot()
+        if self.tracer is not None:
+            out["trace_events"] = len(self.tracer.events)
+        return out

@@ -146,4 +146,4 @@ class MigrationExecutor:
                 self.telemetry.record_migration(s, d, pages,
                                                 pages * per_page)
         else:
-            self.telemetry.executed_moves += result.num_moves
+            self.telemetry.record_executed(result.num_moves)

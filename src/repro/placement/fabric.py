@@ -50,6 +50,26 @@ from repro.placement.telemetry import DomainTelemetry
 EVENTS = ("alloc", "free", "migrate", "share", "latency",
           "demote", "promote", "restore")
 
+# The event payload contract: every ``emit(event, ...)`` call site carries
+# AT LEAST these keyword fields (tests/test_obs.py asserts it statically
+# over the source and dynamically on a live fabric), so tracer/metrics
+# subscribers can rely on them. ``share`` fans out by ``kind``.
+EVENT_FIELDS: dict[str, tuple[str, ...]] = {
+    "alloc": ("view", "page", "domain"),
+    "free": ("view", "page", "domain"),      # view None: owner already gone
+    "migrate": ("view", "src", "dst"),       # one physical page id pair
+    "share": ("kind",),                      # + SHARE_KIND_FIELDS[kind]
+    "latency": ("view", "seconds"),
+    "demote": ("view", "pages", "handles", "seconds"),
+    "promote": ("view", "pages", "seconds"),
+    "restore": ("view", "pages", "seconds"),
+}
+SHARE_KIND_FIELDS: dict[str, tuple[str, ...]] = {
+    "prefix": ("page", "owner", "view"),     # view = the borrowing reader
+    "loan": ("lender", "borrower", "slots"),
+    "reclaim": ("lender", "borrower", "slots", "seconds"),
+}
+
 
 @dataclasses.dataclass
 class SlotLoan:
@@ -93,6 +113,7 @@ class MemoryFabric:
         self._providers: dict[str, object] = {}   # view -> slot provider
         self.loans: list[SlotLoan] = []
         self.persist = None                    # PersistentTier (third tier)
+        self.obs = None                        # Observatory (DESIGN.md §10)
         self._adopted = False
         # Eq.-1 calibration (EWMA over measured per-domain transfer times);
         # starts at the analytic bandwidths and is shared by every view's
@@ -122,6 +143,7 @@ class MemoryFabric:
         fab._providers = {}
         fab.loans = []
         fab.persist = None
+        fab.obs = None
         fab._adopted = True
         fab._alpha = 0.25
         fab._bw_cal = np.asarray(pool.bw, dtype=np.float64).copy()
@@ -179,8 +201,22 @@ class MemoryFabric:
         self._subs[event].append(fn)
 
     def emit(self, event: str, **kw) -> None:
+        """Fan one event out to its subscribers. A raising subscriber is
+        isolated — emit sits on the alloc/free hot path, and a broken
+        observer must never abort placement — and counted in
+        ``telemetry.subscriber_errors`` (labeled per event in the metrics
+        registry)."""
         for fn in self._subs[event]:
-            fn(**kw)
+            try:
+                fn(**kw)
+            except Exception:
+                self.telemetry.record_subscriber_error(event)
+
+    def attach_obs(self, obs) -> None:
+        """Register the fabric observatory (``repro.obs.Observatory``);
+        scheduler/engine/swap hot paths find it via ``view.fabric.obs``."""
+        assert self.obs is None, "fabric already has an observatory"
+        self.obs = obs
 
     # -- views ----------------------------------------------------------------
 

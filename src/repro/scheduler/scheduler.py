@@ -236,6 +236,9 @@ class RequestScheduler:
                 "(view capacity minus swap reservation)")
         self.queued.append(r)
         self.slo.on_submit(r.sid, r.cls, r.arrival_s)
+        obs = self.view.fabric.obs
+        if obs is not None:
+            obs.on_admit(self.view, r, self.now)
         return r.sid
 
     @property
@@ -347,6 +350,9 @@ class RequestScheduler:
         r.state = State.SWAPPED
         self.swapped.append(r)
         self.slo.on_preempt(r.sid, pages)
+        obs = self.view.fabric.obs
+        if obs is not None:
+            obs.on_preempt(self.view, r, self.now, secs, pages)
         if self._plan is not None:
             self._plan.swapped_out.append(r)
             self._plan.swap_seconds += secs
@@ -435,6 +441,9 @@ class RequestScheduler:
             r.state = State.RUNNING
             self.running.append(r)
             self.slo.on_resume(r.sid, len(r.pages))
+            obs = self.view.fabric.obs
+            if obs is not None:
+                obs.on_resume(self.view, r, self.now, secs)
             plan.swapped_in.append(r)
             plan.swap_seconds += secs
 
@@ -557,6 +566,9 @@ class RequestScheduler:
         self.running.remove(r)
         self.finished.append(r)
         self.slo.on_finish(r.sid, self.now, r.produced)
+        obs = self.view.fabric.obs
+        if obs is not None:
+            obs.on_finish(self.view, r, self.now)
 
     # -- reporting ------------------------------------------------------------
 

@@ -414,5 +414,11 @@ class KVSwapManager:
         pb = self.view.page_bytes
         read = np.bincount(src_doms, minlength=nd) * pb
         write = np.bincount(dst_doms, minlength=nd) * pb
-        return max(self.view.stall_seconds(read),
+        secs = max(self.view.stall_seconds(read),
                    self.view.stall_seconds(write))
+        obs = self.view.fabric.obs
+        if obs is not None:
+            # Eq.-1 prediction vs measurement (observatory drift ledger):
+            # the transfer touches both page sets, read side + write side
+            obs.observe_transfer(read + write, secs)
+        return secs

@@ -362,7 +362,14 @@ class ServeEngine:
             if batch else 0.0
         dt = ((wall if self.wall_clock else 0.0) + sim + plan.swap_seconds
               + (self.sim_step_s if batch else 0.0))
+        v0 = self.scheduler.now
         self.scheduler.advance(dt)
+        obs = self.view.fabric.obs
+        if obs is not None:
+            # spans for this step's prefill chunks + decode batch, page
+            # heat touches, and (probe-equipped) the batch-read drift pair
+            obs.on_engine_step(self.view, plan, batch, read_pages,
+                               sim, v0, dt)
         for s in batch:
             if produced_before[s.sid] == 0 and s.produced > 0:
                 self.scheduler.notice_first_token(s)

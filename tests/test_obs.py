@@ -1,0 +1,488 @@
+"""Fabric observatory (DESIGN.md §10): metrics registry, span tracer,
+Eq.-1 drift ledger, page heat, event-payload contracts, emit hardening,
+and the benchmark-artifact schema check."""
+
+import ast
+import dataclasses
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.dwp import DWPConfig
+from repro.obs import DEFAULT_BUCKETS, MetricsRegistry, Observatory
+from repro.obs.drift import DriftLedger
+from repro.obs.heat import PageHeat
+from repro.placement.fabric import (EVENT_FIELDS, EVENTS, SHARE_KIND_FIELDS,
+                                    MemoryFabric)
+from repro.placement.telemetry import ClassSloCounters, DomainTelemetry, Ring
+from repro.scheduler import (KVSwapManager, PriorityClass, RequestScheduler,
+                             SloSpec, WorkloadSpec, generate)
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import BwapPagePool, MemoryDomain
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# Ring.quantile
+# ---------------------------------------------------------------------------
+
+def test_ring_quantile_matches_numpy():
+    r = Ring(capacity=64)
+    vals = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.0]
+    for v in vals:
+        r.push(v)
+    for q in (0.0, 0.5, 0.95, 1.0):
+        assert r.quantile(q) == pytest.approx(np.quantile(vals, q))
+
+
+def test_ring_quantile_empty_and_wrapped():
+    r = Ring(capacity=4)
+    assert r.quantile(0.5) == 0.0
+    for v in range(10):          # wraps: window is the last 4 pushes
+        r.push(float(v))
+    assert r.quantile(0.5) == pytest.approx(np.quantile([6, 7, 8, 9], 0.5))
+    assert r.quantile(1.0) == 9.0
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_labels_and_snapshot():
+    m = MetricsRegistry()
+    c = m.counter("reqs_total", "Requests.", ("view", "cls"))
+    c.labels("A", "hi").inc()
+    c.labels("A", "hi").inc(2)
+    c.labels("B", "lo").inc(5)
+    assert c.value("A", "hi") == 3
+    assert c.value("B", "lo") == 5
+    assert c.value("B", "hi") == 0          # unobserved child reads 0
+    assert c.total() == 8
+    g = m.gauge("occupancy", "Pages.", ("tier",))
+    g.labels("fast").set(7)
+    g.labels("fast").set(4)
+    assert g.value("fast") == 4
+    snap = m.snapshot()
+    assert snap["reqs_total"]["type"] == "counter"
+    assert {"labels": {"view": "A", "cls": "hi"}, "value": 3.0} \
+        in snap["reqs_total"]["series"]
+    # idempotent re-registration returns the same family
+    assert m.counter("reqs_total", "Requests.", ("view", "cls")) is c
+    with pytest.raises(AssertionError):
+        m.counter("reqs_total", "Requests.", ("other",))
+
+
+def test_histogram_buckets_and_quantile():
+    m = MetricsRegistry()
+    h = m.histogram("lat", "Latency.", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    child = h.labels()
+    assert child.count == 5
+    assert child.sum == pytest.approx(56.05)
+    assert list(child.counts) == [1, 2, 1, 1]     # last = +Inf bucket
+    # p50 lands in the (0.1, 1.0] bucket; +Inf clamps to the top edge
+    assert 0.1 <= child.quantile(0.5) <= 1.0
+    assert child.quantile(1.0) == 10.0
+    assert all(b > 0 for b in DEFAULT_BUCKETS)
+
+
+def test_prometheus_text_format():
+    m = MetricsRegistry()
+    m.counter("a_total", 'Help with "quotes".', ("dom",)).labels(
+        'x"y\\z').inc(2)
+    m.histogram("h_seconds", "H.", buckets=(1.0, 2.0)).observe(1.5)
+    text = m.prometheus_text()
+    assert "# HELP a_total" in text and "# TYPE a_total counter" in text
+    assert r'a_total{dom="x\"y\\z"} 2' in text
+    assert 'h_seconds_bucket{le="1"} 0' in text
+    assert 'h_seconds_bucket{le="2"} 1' in text
+    assert 'h_seconds_bucket{le="+Inf"} 1' in text
+    assert "h_seconds_sum 1.5" in text and "h_seconds_count 1" in text
+
+
+# ---------------------------------------------------------------------------
+# telemetry migrated onto the registry (snapshot contract unchanged)
+# ---------------------------------------------------------------------------
+
+def test_telemetry_mirrors_registry():
+    tel = DomainTelemetry(["fast", "slow"])
+    tel.record_alloc(0, 3)
+    tel.record_free(1, 2)
+    tel.record_migration(0, 1, 4, 4096)
+    tel.record_swap("out", 5, 0.25)
+    tel.record_latency(0.02)
+    tel.record_stall(1, 0.004)
+    tel.record_tier("demote", 6, 0.5)
+    tel.record_tier_occupancy("fast_domains", 10, 20)
+    m = tel.metrics
+    assert m.get("repro_pages_allocated_total").value("fast") == 3
+    assert m.get("repro_pages_freed_total").value("slow") == 2
+    assert m.get("repro_migrated_pages_total").value("fast", "out") == 4
+    assert m.get("repro_migrated_bytes_total").value("slow", "in") == 4096
+    assert m.get("repro_executed_moves_total").total() == 4
+    assert m.get("repro_swap_pages_total").value("out") == 5
+    assert m.get("repro_swap_seconds_total").total() == pytest.approx(0.25)
+    assert m.get("repro_tier_pages_total").value("demote") == 6
+    assert m.get("repro_tier_occupancy_pages").value(
+        "fast_domains", "used") == 10
+    # legacy snapshot shape intact, plus the new quantile fields
+    snap = tel.snapshot()
+    assert snap["domains"]["fast"]["allocs"] == 3
+    assert snap["swap_outs"] == 5 and snap["executed_moves"] == 4
+    assert snap["latency_p50_s"] == pytest.approx(0.02)
+    assert snap["domains"]["slow"]["stall_p95_s"] == pytest.approx(0.004)
+    assert snap["subscriber_errors"] == 0
+    text = tel.prometheus_text()
+    assert 'repro_pages_allocated_total{domain="fast"} 3' in text
+
+
+def test_slo_counters_back_the_registry():
+    tel = DomainTelemetry(["d0"])
+    slo = tel.attach_slo()
+    assert isinstance(slo, ClassSloCounters)
+    slo.add("interactive", "submitted")
+    slo.add("interactive", "goodput_tokens", 12)
+    fam = tel.metrics.get("repro_slo_events_total")
+    assert fam.value("interactive", "submitted") == 1
+    assert fam.value("interactive", "goodput_tokens") == 12
+    assert slo.snapshot()["interactive"]["goodput_tokens"] == 12
+
+
+# ---------------------------------------------------------------------------
+# satellite: emit hardening
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    return dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                               num_layers=1, compute_dtype="float32")
+
+
+def _fabric():
+    return MemoryFabric(_cfg(), [
+        MemoryDomain("fast", 8, 819.0, True),
+        MemoryDomain("slow", 16, 0.016, False),
+    ], page_size=4, policy="bwap_dwp")
+
+
+def test_emit_isolates_raising_subscriber():
+    fab = _fabric()
+    view = fab.view("A", quota=[8, 16], home=(0,))
+    seen = []
+
+    def boom(**kw):
+        raise RuntimeError("broken observer")
+
+    fab.subscribe("alloc", boom)
+    fab.subscribe("alloc", lambda **kw: seen.append(kw))
+    pages = []
+    view.append_page(pages)          # must not raise through the hot path
+    assert len(seen) == 1            # later subscribers still ran
+    assert fab.telemetry.subscriber_errors == 1
+    assert fab.telemetry.metrics.get(
+        "repro_subscriber_errors_total").value("alloc") == 1
+    view.release(pages)
+    fab.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# satellite: event payload contracts
+# ---------------------------------------------------------------------------
+
+def _emit_calls(path: pathlib.Path):
+    """Every ``*.emit("<event>", ...)`` call site in one source file."""
+    tree = ast.parse(path.read_text())
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "emit"
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            continue
+        yield path.name, node
+
+
+def test_every_emit_call_site_carries_the_contract_fields():
+    files = [SRC / "placement" / "fabric.py",
+             SRC / "placement" / "persist.py"]
+    sites = [c for f in files for c in _emit_calls(f)]
+    assert len(sites) >= 10, "emit call sites went missing"
+    seen_events = set()
+    for fname, call in sites:
+        event = call.args[0].value
+        assert event in EVENT_FIELDS, \
+            f"{fname}:{call.lineno}: undocumented event {event!r}"
+        seen_events.add(event)
+        kws = {k.arg for k in call.keywords if k.arg is not None}
+        missing = set(EVENT_FIELDS[event]) - kws
+        assert not missing, (f"{fname}:{call.lineno}: emit({event!r}) "
+                             f"missing contract fields {sorted(missing)}")
+        if event == "share":
+            kind = next(k.value.value for k in call.keywords
+                        if k.arg == "kind")
+            assert kind in SHARE_KIND_FIELDS, \
+                f"{fname}:{call.lineno}: undocumented share kind {kind!r}"
+            missing = set(SHARE_KIND_FIELDS[kind]) - kws
+            assert not missing, \
+                (f"{fname}:{call.lineno}: share kind={kind!r} missing "
+                 f"{sorted(missing)}")
+    # the contract documents exactly the bus vocabulary
+    assert set(EVENT_FIELDS) == set(EVENTS)
+    assert "alloc" in seen_events and "share" in seen_events
+
+
+def test_live_events_honor_the_contract():
+    fab = _fabric()
+    violations = []
+
+    def validator(event):
+        def check(**kw):
+            need = set(EVENT_FIELDS[event])
+            if event == "share":
+                need |= set(SHARE_KIND_FIELDS[kw["kind"]])
+            if not need <= set(kw):
+                violations.append((event, sorted(need - set(kw))))
+        return check
+
+    for ev in EVENTS:
+        fab.subscribe(ev, validator(ev))
+    a = fab.view("A", quota=[8, 16], home=(0,), level=1)
+    b = fab.view("B", quota=[0, 0], home=(1,))
+    pages = []
+    for _ in range(3):
+        a.append_page(pages)            # alloc
+    a.register_prefix([1, 2, 3, 4, 5, 6, 7, 8], pages[:2], 8)
+    got = []
+    b.probe_prefix([1, 2, 3, 4, 5, 6, 7, 8], got)    # share kind=prefix
+    a.migrate(pages)                    # migrate (may be a no-op move)
+    a.record_latency(0.01)              # latency
+    b.release(got)
+    a.release(pages)                    # free
+    assert not violations, violations
+    assert fab.telemetry.subscriber_errors == 0, \
+        "contract validator raised instead of recording"
+
+
+# ---------------------------------------------------------------------------
+# drift ledger
+# ---------------------------------------------------------------------------
+
+def test_drift_vector_observation_converges_bw():
+    fab = _fabric()                      # profile: fast 819, slow 0.016
+    bw_true = np.array([819.0, 0.032])   # slow domain is 2x the profile
+    led = DriftLedger(fab, calibrate_every=1)
+    pb = float(fab.pool.page_bytes)
+    bpd = np.array([4 * pb, 8 * pb])
+    for _ in range(40):
+        measured = bpd / (bw_true * 1e9)
+        predicted = float((bpd / (fab.bw_effective * 1e9)).max())
+        led.observe("batch_read", bpd, predicted, measured)
+    bw = fab.bw_effective
+    assert abs(bw[1] - bw_true[1]) / bw_true[1] < 0.01
+    s = led.summary()
+    assert s["calibrations"] == 40
+    assert s["kinds"]["batch_read"]["count"] == 40
+    # drift ratio EWMA heads toward measured/predicted = profile-error
+    assert s["domain_drift"][1] < 1.0    # faster than predicted
+
+
+def test_drift_scalar_attributes_to_bottleneck_domain():
+    fab = _fabric()
+    led = DriftLedger(fab, calibrate_every=100)
+    pb = float(fab.pool.page_bytes)
+    # slow domain dominates the predicted per-domain time by construction
+    bpd = np.array([pb, 4 * pb])
+    led.observe("swap_transfer", bpd, 0.001, 0.002)   # scalar measurement
+    assert list(led.domain_samples) == [0, 1]         # bottleneck only
+    assert len(led.ratio["swap_transfer"]) == 1
+    assert led.ratio["swap_transfer"].last() == pytest.approx(2.0)
+    led.observe_scalar("tier_copy", 0.5, 1.0)
+    assert led.ratio["tier_copy"].last() == pytest.approx(2.0)
+
+
+def test_drift_flush_without_samples_is_a_noop():
+    fab = _fabric()
+    led = DriftLedger(fab)
+    before = fab.calibration_samples
+    assert led.flush() is False
+    assert fab.calibration_samples == before
+
+
+# ---------------------------------------------------------------------------
+# page heat
+# ---------------------------------------------------------------------------
+
+def test_heat_touch_decay_and_free():
+    fab = _fabric()
+    heat = PageHeat(fab.pool, decay=0.5)
+    heat.touch([0, 1])
+    assert heat.value(0) == 1.0
+    heat.step()
+    assert heat.value(0) == 0.5          # lazy decay on read
+    heat.touch([0])
+    assert heat.value(0) == 1.5
+    heat.on_free(page=1)
+    assert heat.value(1) == 0.0 and heat.live_pages() == 1
+    assert heat.hottest(5) == [(0, 1.5)]
+    pd = heat.per_domain()
+    dom = fab.pool.domains[fab.pool.domain_of(0)].name
+    assert pd[dom]["pages"] == 1 and pd[dom]["max"] == 1.5
+    snap = heat.snapshot()
+    assert snap["live_pages"] == 1 and snap["touches"] == 3
+
+
+def test_observatory_counts_bus_events_and_purges_heat():
+    fab = _fabric()
+    obs = Observatory(fab, drift=False)
+    view = fab.view("A", quota=[8, 16], home=(0,))
+    pages = []
+    for _ in range(2):
+        view.append_page(pages)
+    obs.heat.touch(pages)
+    assert obs.heat.live_pages() == 2
+    view.release(pages)
+    assert obs.heat.live_pages() == 0    # free events purge heat
+    ev = obs.metrics.get("repro_fabric_events_total")
+    assert ev.value("alloc") == 2 and ev.value("free") == 2
+    assert obs.metrics.get("repro_page_events_total").value(
+        "alloc", "A", "fast") + obs.metrics.get(
+        "repro_page_events_total").value("alloc", "A", "slow") == 2
+    with pytest.raises(AssertionError):
+        fab.attach_obs(obs)              # one observatory per fabric
+
+
+# ---------------------------------------------------------------------------
+# tracer + engine integration (shared run; preemption + token identity)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_runs():
+    cfg = _cfg()
+    from repro.models.lm import LM
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    trace = generate(WorkloadSpec(
+        kind="poisson", num_requests=5, mean_interarrival_s=0.005,
+        prompt_mean=10, prompt_max=20, max_new=6,
+        vocab_size=cfg.vocab_size,
+        class_mix=(("hi", 0.4), ("lo", 0.6)), seed=0))
+
+    def run(with_obs):
+        pool = BwapPagePool(cfg, [
+            MemoryDomain("hbm_local", 8, 819.0, True),
+            MemoryDomain("hbm_peer", 8, 0.05, False),
+            MemoryDomain("host", 40, 0.016, False),
+        ], page_size=4, dwp_config=DWPConfig(n=10 ** 6, c=1))
+        swap = KVSwapManager(pool, placement="bwap_canonical",
+                             reserve_fraction=0.9)
+        sched = RequestScheduler(
+            pool, max_batch=3, prefill_token_budget=16,
+            classes=[PriorityClass("hi", 2, SloSpec(ttft_s=0.5,
+                                                    tpot_s=0.1)),
+                     PriorityClass("lo", 0)],
+            default_class="lo", default_max_new=6, swap=swap)
+        eng = ServeEngine(cfg, params, pool, scheduler=sched,
+                          wall_clock=False, sim_step_s=0.01)
+        obs = Observatory(pool, drift=False) if with_obs else None
+        for t in trace:
+            eng.submit(t.prompt, cls=t.cls, max_new=t.max_new,
+                       arrival_s=t.arrival_s)
+        steps = 0
+        while (eng.active or eng.waiting) and steps < 300:
+            eng.step()
+            steps += 1
+        tokens = [tuple(s.tokens) for s in sorted(eng.finished,
+                                                  key=lambda s: s.sid)]
+        return tokens, obs, pool
+
+    base_tokens, _, _ = run(False)
+    tokens, obs, pool = run(True)
+    return base_tokens, tokens, obs, pool
+
+
+def test_tracing_is_token_identical(traced_runs):
+    base_tokens, tokens, _, _ = traced_runs
+    assert tokens == base_tokens
+
+
+def test_preempted_request_has_full_span_set(traced_runs):
+    _, _, obs, pool = traced_runs
+    assert pool.telemetry.swap_outs > 0, "workload must preempt"
+    preempted = sorted({e["tid"] - 1
+                        for e in obs.tracer.spans("swap_out")})
+    assert preempted
+    sid = preempted[0]
+    for name in ("admit", "prefill", "decode", "swap_out", "swap_in",
+                 "finish"):
+        assert obs.tracer.spans(name, sid=sid), \
+            f"preempted request {sid} missing {name!r}"
+    # queued span closes at first work, never negative
+    for ev in obs.tracer.spans("queued"):
+        assert ev["dur"] >= 0
+    # virtual clock ordering within the request's track
+    spans = sorted((e for e in obs.tracer.spans(sid=sid)),
+                   key=lambda e: e["ts"])
+    assert spans[0]["name"] == "admit"
+    assert spans[-1]["name"] == "finish"
+
+
+def test_trace_export_is_perfetto_loadable(traced_runs, tmp_path):
+    _, _, obs, _ = traced_runs
+    path = obs.tracer.export(tmp_path / "trace.json")
+    data = json.loads(path.read_text())
+    assert data["displayTimeUnit"] == "ms"
+    evs = data["traceEvents"]
+    assert evs and all("ph" in e and "pid" in e and "tid" in e
+                       for e in evs)
+    names = {e["name"] for e in evs if e["ph"] == "M"}
+    assert "process_name" in names and "thread_name" in names
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+
+
+def test_request_lifecycle_counters(traced_runs):
+    _, _, obs, _ = traced_runs
+    req = obs.metrics.get("repro_requests_total")
+    admits = sum(req.value("admit", "default", c) for c in ("hi", "lo"))
+    finishes = sum(req.value("finish", "default", c) for c in ("hi", "lo"))
+    assert admits == 5 and finishes == 5
+    # the bus-side latency histogram saw every decode step
+    lat = obs.metrics.get("repro_step_latency_seconds").labels("default")
+    assert lat.count > 0 and lat.quantile(0.5) > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: benchmark artifact schema check
+# ---------------------------------------------------------------------------
+
+def test_artifacts_check_validates_schema_and_finiteness(tmp_path):
+    from benchmarks import artifacts
+    name = "BENCH_obs.json"
+    # missing file
+    with pytest.raises(SystemExit, match="missing"):
+        artifacts.check([name], root=tmp_path)
+    # unparseable
+    (tmp_path / name).write_text("{nope")
+    with pytest.raises(SystemExit, match="unparseable"):
+        artifacts.check([name], root=tmp_path)
+    # missing required keys
+    (tmp_path / name).write_text(json.dumps({"calibration": {}}))
+    with pytest.raises(SystemExit, match="overhead"):
+        artifacts.check([name], root=tmp_path)
+    # non-finite numbers
+    (tmp_path / name).write_text(
+        '{"calibration": {"x": NaN}, "overhead": {}}')
+    with pytest.raises(SystemExit, match="non-finite"):
+        artifacts.check([name], root=tmp_path)
+    # valid
+    (tmp_path / name).write_text(
+        json.dumps({"calibration": {"x": 1.0}, "overhead": {"y": 2}}))
+    artifacts.check([name], root=tmp_path)
+    # every schema name is covered by EXPECTED and vice versa
+    assert set(artifacts.EXPECTED) == set(artifacts.SCHEMAS)
