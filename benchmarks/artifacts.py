@@ -41,7 +41,10 @@ SCHEMAS: dict[str, tuple[str, ...]] = {
     "BENCH_serve.json": ("greedy", "speculative", "decode_step_ratio",
                          "token_identical"),
     # obs_bench.suite: calibration loop + tracing overhead
-    "BENCH_obs.json": ("calibration", "overhead"),
+    "BENCH_obs.json": ("calibration", "calibration_micro", "overhead"),
+    # scheduler_bench.coda_compare: micro-batch decode + re-homing
+    "BENCH_coda.json": ("coda", "global", "goodput_ratio",
+                        "token_identical"),
 }
 
 EXPECTED = tuple(SCHEMAS)

@@ -11,6 +11,8 @@ Two gates:
    — after the run, ``bw_effective`` must sit within 10% of ground truth
    on every domain that carried traffic. Before calibration the planted
    error is 100%, so the gate proves the loop, not the initial profile.
+   Runs twice: global batching and micro-batch decode (DESIGN.md §11) —
+   the latter gates the per-launch drift attribution.
 
 2. **Tracing overhead.** The scheduler-bench workload runs with the full
    observatory (tracer + metrics + heat) and without; the traced run must
@@ -61,7 +63,13 @@ def _model():
     return cfg, model.init(jax.random.PRNGKey(0))
 
 
-def calibration_loop(seed: int = 0, check: bool = True) -> dict:
+def calibration_loop(seed: int = 0, check: bool = True,
+                     micro_batch: bool = False) -> dict:
+    """``micro_batch=True`` runs the same loop with per-domain decode
+    launches (DESIGN.md §11): the ledger then bills each launch only for
+    the domains it actually read (``observe_launches``), and convergence
+    proves the per-launch attribution — a launch's bottleneck time
+    credited to an idle domain would drag its ratio off truth."""
     cfg, params = _model()
     names = list(BW_PROFILE)
     domains = [
@@ -81,9 +89,10 @@ def calibration_loop(seed: int = 0, check: bool = True) -> dict:
     swap = KVSwapManager(pool, placement="bwap_canonical",
                          reserve_fraction=0.9)
     sched = RequestScheduler(pool, max_batch=4, prefill_token_budget=32,
-                             default_max_new=12, swap=swap)
+                             default_max_new=12, swap=swap,
+                             micro_batch=micro_batch)
     eng = ServeEngine(cfg, params, pool, scheduler=sched,
-                      wall_clock=False, sim_step_s=0.01)
+                      wall_clock=False, sim_step_s=0.01, rehome=False)
     obs = Observatory(pool, tracer=False, heat=False, probe=probe,
                       calibrate_every=2)
     trace = generate(WorkloadSpec(
@@ -92,9 +101,11 @@ def calibration_loop(seed: int = 0, check: bool = True) -> dict:
         vocab_size=cfg.vocab_size, seed=seed))
     for t in trace:
         eng.submit(t.prompt, max_new=t.max_new, arrival_s=t.arrival_s)
-    steps = 0
+    steps = multi = 0
     while (eng.active or eng.waiting) and steps < 1500:
-        eng.step()
+        info = eng.step()
+        if info.get("launches", 0) > 1:
+            multi += 1
         steps += 1
 
     s = obs.drift.summary()
@@ -118,11 +129,15 @@ def calibration_loop(seed: int = 0, check: bool = True) -> dict:
         "ratio_p95": s["kinds"]["batch_read"]["ratio_p95"],
         "finished": len(eng.finished),
         "requests": len(trace),
+        "micro_batch": micro_batch,
+        "multi_launch_steps": multi,
         "tolerance": CAL_TOL,
     }
-    print(f"calibration: {s['calibrations']} calibrations over "
+    mode = "micro-batch" if micro_batch else "global"
+    print(f"calibration ({mode}): {s['calibrations']} calibrations over "
           f"{s['observations']} observations, {len(eng.finished)}/"
-          f"{len(trace)} requests")
+          f"{len(trace)} requests"
+          + (f", {multi} multi-launch steps" if micro_batch else ""))
     for i, n in enumerate(names):
         mark = "gated" if i in gated else f"{s['domain_samples'][i]} samples"
         print(f"  {n:14s} profile {bw_profile[i]:.5g} true {bw_true[i]:.5g} "
@@ -134,6 +149,9 @@ def calibration_loop(seed: int = 0, check: bool = True) -> dict:
         # gate — otherwise the bench proves nothing
         assert {names[1], names[2]} <= set(row["gated_domains"]), \
             f"planted domains not exercised: {row['gated_domains']}"
+        if micro_batch:
+            assert multi > 0, \
+                "micro-batch calibration never partitioned a step"
         for i in gated:
             assert err_before[i] <= CAL_TOL or rel_err[i] < err_before[i], \
                 f"{names[i]}: calibration made the error worse"
@@ -231,8 +249,10 @@ def overhead(seed: int = 0, repeats: int = 3, check: bool = True) -> dict:
 
 def suite(seed: int = 0, check: bool = True) -> dict:
     cal = calibration_loop(seed=seed, check=check)
+    cal_micro = calibration_loop(seed=seed, check=check, micro_batch=True)
     ov = overhead(seed=seed, check=check)
-    out = {"calibration": cal, "overhead": ov}
+    out = {"calibration": cal, "calibration_micro": cal_micro,
+           "overhead": ov}
     artifacts.dump("BENCH_obs.json", out)
     return out
 

@@ -140,6 +140,13 @@ def main() -> None:
     # entry point. Emits BENCH_persist.json.
     scheduler_bench.persist_compare(seed=args.seed, check=False)
 
+    _hdr("Compute-follows-data — micro-batch decode + hot-page re-homing "
+         "vs global batching")
+    # check=False: the sweep accepts arbitrary --seed values; the hard
+    # token-identity + >=1.15x goodput gate runs on the benchmark's own
+    # (CI) entry point. Emits BENCH_coda.json.
+    scheduler_bench.coda_compare(seed=args.seed, check=False)
+
     _hdr("Speculative decode — steps saved vs greedy (token-identical)")
     from benchmarks import serve_bench
     # check=False: the sweep accepts arbitrary --seed values; the hard

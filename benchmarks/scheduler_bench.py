@@ -515,6 +515,116 @@ def persist_compare(seed: int = 0, check: bool = True) -> dict:
     return rows
 
 
+def coda_compare(seed: int = 0, check: bool = True) -> dict:
+    """Compute-follows-data vs global batching (ISSUE 8, CI-gated).
+
+    A ``domain_skew`` trace: a back-to-back flood of long prompts fills
+    the fast domain, so the steady tail's shared 32-token template lands
+    in the slow domains. The flood is short-lived (max_new trimmed to 4);
+    the sharers decode long, and the fast domain is sized to hold their
+    whole steady-state footprint once the flood drains. Under ``coda``
+    the engine partitions each decode step into per-bottleneck-domain
+    launches and — once the flood frees fast pages — re-homes the hot
+    shared prefix into ``hbm_local`` with an all-holders remap, so the
+    sharers' remaining steps stop paying the slow-domain Eq.-1 stall.
+    ``bwap_dwp`` (global) runs the identical trace with one launch per
+    step and no re-homing: allocation never revisits placement and
+    ``migrate()`` refuses shared pages, so the prefix stays pinned in
+    slow memory for the rest of the run even though fast pages are free.
+
+    Gates: token-identical outputs by sid, zero failures, fabric
+    invariants clean after the run, coda re-homed > 0 pages, and coda
+    goodput >= 1.15x global. Virtual-clock deterministic."""
+    from repro.obs.observatory import Observatory
+    from repro.placement.fabric import as_view
+
+    cfg = dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                              num_layers=1, compute_dtype="float32")
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    trace = generate(WorkloadSpec(
+        kind="domain_skew", num_requests=6, skew_frac=0.5,
+        mean_interarrival_s=0.02, prompt_mean=2, prompt_max=48,
+        max_new=32, vocab_size=cfg.vocab_size, seed=seed,
+        prefix_len=32, prefix_groups=1, prefix_frac=1.0))
+    # the flood only exists to claim fast pages — trim its decode so the
+    # fast domain frees up while the sharers still have most of their
+    # tokens left to pay for, but keep it alive long enough that the
+    # sharers' template prefills while fast is still full (flood prompts
+    # are pinned at prompt_max)
+    trace = [dataclasses.replace(t, max_new=10) if len(t.prompt) == 48
+             else t for t in trace]
+
+    def run(policy: str) -> dict:
+        # hbm_local is sized so the flood's 36 prompt pages fill it while
+        # the sharers prefill (template -> slow), yet the sharers' whole
+        # steady-state footprint (8 prefix + bodies + 24 growth pages)
+        # fits once the flood drains — the shared prefix is then the ONLY
+        # slow-domain residue, and only re-homing can move it
+        pool = BwapPagePool(cfg, [
+            MemoryDomain("hbm_local", 34, 819.0, True),
+            MemoryDomain("hbm_peer_1hop", 24, 0.00125, False),
+            MemoryDomain("host_dram", 40, 0.0004, False),
+        ], page_size=4, policy=policy,
+            dwp_config=DWPConfig(n=10 ** 6, c=1))
+        view = as_view(pool)
+        Observatory(pool, tracer=False, drift=False)  # heat for re-homing
+        sched = RequestScheduler(pool, max_batch=8,
+                                 prefill_token_budget=32,
+                                 default_max_new=32)
+        eng = ServeEngine(cfg, params, pool, scheduler=sched,
+                          wall_clock=False, sim_step_s=0.01)
+        for t in trace:
+            eng.submit(t.prompt, max_new=t.max_new, arrival_s=t.arrival_s)
+        steps = multi = 0
+        while (eng.active or eng.waiting) and steps < 3000:
+            info = eng.step()
+            if info.get("launches", 0) > 1:
+                multi += 1
+            steps += 1
+        view.fabric.check_invariants()
+        slo = sched.slo.summary(sched.now)
+        return {
+            "policy": policy,
+            "finished": len(eng.finished),
+            "failed": len(trace) - len(eng.finished),
+            "steps": steps,
+            "multi_launch_steps": multi,
+            "rehomed_pages": eng.rehomed_pages,
+            "makespan_s": sched.now,
+            "goodput_tok_s": slo["goodput_tok_s"],
+            "tokens": {s.sid: list(s.tokens) for s in eng.finished},
+        }
+
+    coda, glob = run("coda"), run("bwap_dwp")
+    identical = coda["tokens"] == glob["tokens"]
+    ratio = coda["goodput_tok_s"] / max(glob["goodput_tok_s"], 1e-9)
+    for r in (coda, glob):
+        print(f"  {r['policy']:9s} goodput {r['goodput_tok_s']:7.1f} tok/s "
+              f"makespan {r['makespan_s']:.3f}s  steps {r['steps']:3d} "
+              f"(multi-launch {r['multi_launch_steps']:3d})  rehomed "
+              f"{r['rehomed_pages']:2d} pages  failed {r['failed']}")
+    print(f"-> compute-follows-data vs global batching: {ratio:.2f}x "
+          f"goodput (token-identical: {identical})")
+    if check:
+        assert identical, \
+            "micro-batching/re-homing changed generated tokens"
+        assert coda["failed"] == glob["failed"] == 0
+        assert coda["rehomed_pages"] > 0, \
+            "no hot shared page was re-homed — the scenario lost its teeth"
+        assert glob["rehomed_pages"] == 0
+        assert coda["multi_launch_steps"] > 0, \
+            "coda never partitioned a decode step"
+        assert ratio >= 1.15, (
+            f"compute-follows-data must beat global batching >= 1.15x "
+            f"goodput (got {ratio:.2f}x)")
+    rows = {"coda": {k: v for k, v in coda.items() if k != "tokens"},
+            "global": {k: v for k, v in glob.items() if k != "tokens"},
+            "goodput_ratio": ratio,
+            "token_identical": identical}
+    artifacts.dump("BENCH_coda.json", rows)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -523,6 +633,7 @@ def main() -> None:
     ap.add_argument("--skip-prefix", action="store_true")
     ap.add_argument("--skip-fabric", action="store_true")
     ap.add_argument("--skip-persist", action="store_true")
+    ap.add_argument("--skip-coda", action="store_true")
     args = ap.parse_args()
     compare(args.requests, args.new, args.seed)
     if not args.skip_prefix:
@@ -535,6 +646,10 @@ def main() -> None:
     if not args.skip_persist:
         print("\npersistence tier — warm vs cold restart TTFT")
         persist_compare(seed=args.seed)
+    if not args.skip_coda:
+        print("\ncompute-follows-data — micro-batch decode + re-homing "
+              "vs global batching")
+        coda_compare(seed=args.seed)
 
 
 if __name__ == "__main__":

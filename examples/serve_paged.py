@@ -106,7 +106,13 @@ def main():
     ap.add_argument("--new", type=int, default=24)
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--kind", default="bursty",
-                    choices=["poisson", "bursty", "heavy_tail"])
+                    choices=["poisson", "bursty", "heavy_tail",
+                             "domain_skew", "hot_prefix"])
+    ap.add_argument("--policy", default="bwap_dwp",
+                    help="placement policy (see repro.placement.policy); "
+                         "'coda' adds compute-follows-data execution: "
+                         "per-domain micro-batch decode + heat-driven "
+                         "re-homing of hot shared pages (DESIGN.md §11)")
     ap.add_argument("--prefix-len", type=int, default=16,
                     help="shared system-prompt length (0 disables)")
     ap.add_argument("--spec", type=int, default=0, metavar="K",
@@ -140,7 +146,8 @@ def main():
         MemoryDomain("host_dram", 64, 0.016, False),
     ]
     pool = BwapPagePool(cfg, domains, page_size=8,
-                        dwp_config=DWPConfig(n=6, c=1))
+                        dwp_config=DWPConfig(n=6, c=1),
+                        policy=args.policy)
     swap = KVSwapManager(pool, placement="bwap_canonical",
                          reserve_fraction=0.95)
     sched = RequestScheduler(
@@ -159,9 +166,12 @@ def main():
     eng = ServeEngine(cfg, params, pool, scheduler=sched, wall_clock=False,
                       sim_step_s=0.02, drafter=drafter)
     obs = None
-    if args.trace_out:
+    if args.trace_out or eng.rehome:
+        # --policy coda needs the observatory's heat map to rank re-home
+        # candidates; tracing stays opt-in via --trace-out
         from repro.obs import Observatory
-        obs = Observatory(pool, drift=False)
+        obs = Observatory(pool, drift=False,
+                          tracer=bool(args.trace_out))
 
     trace = generate(WorkloadSpec(
         kind=args.kind, num_requests=args.requests,
@@ -185,10 +195,12 @@ def main():
                    arrival_s=t.arrival_s)
 
     step = 0
-    peak_phys = peak_logical = 0
+    peak_phys = peak_logical = multi_launch_steps = 0
     while eng.active or eng.waiting:
         info = eng.step()
         step += 1
+        if info.get("launches", 0) > 1:
+            multi_launch_steps += 1
         pt = info.get("pagetable", {})
         peak_phys = max(peak_phys, pt.get("physical_pages", 0))
         peak_logical = max(peak_logical, pt.get("logical_pages", 0))
@@ -231,10 +243,15 @@ def main():
               f" ms (p95 {row['ttft_p95_s'] * 1e3:7.1f})  tpot "
               f"{row['tpot_mean_s'] * 1e3:6.1f} ms  preempted "
               f"{row['preemptions']}")
+    if eng.rehome or sched.micro_batch:
+        print(f"compute-follows-data ({args.policy}): "
+              f"{multi_launch_steps}/{step} steps ran per-domain "
+              f"micro-batch launches; {eng.rehomed_pages} hot shared "
+              f"pages re-homed into fast domains")
     for s in eng.finished[:3]:
         print(f"  seq {s.sid} [{s.cls}]: {s.tokens[:5]}... -> "
               f"{s.tokens[s.prompt_len:s.prompt_len + 5]}...")
-    if obs is not None:
+    if obs is not None and obs.tracer is not None:
         path = obs.tracer.export(args.trace_out)
         spans = {n: len(obs.tracer.spans(n))
                  for n in ("prefill", "decode", "swap_out", "swap_in")}

@@ -177,6 +177,30 @@ def stall_cost(bytes_per_domain: np.ndarray,
     return float((b / (bw * 1e9)).max())
 
 
+def move_cost(bytes_per_src_domain: np.ndarray,
+              bandwidths_gbps: np.ndarray,
+              dst_domain: int) -> float:
+    """Eq.-1 price of re-homing a batch of pages into ``dst_domain``.
+
+    ``bytes_per_src_domain[d]`` bytes are read out of source domain ``d``;
+    reads from distinct sources overlap (the same max-parallel-transfer
+    shape as :func:`stall_cost`), while every moved byte funnels into the
+    one destination, so the write side is the *total* over the destination
+    bandwidth. The slower side gates. Re-homing targets fast domains, so
+    the read out of the slow source is normally the bottleneck — but a
+    many-source batch into a modest destination flips that, and this max
+    keeps the budget honest either way.
+    """
+    b = np.asarray(bytes_per_src_domain, dtype=np.float64)
+    bw = np.asarray(bandwidths_gbps, dtype=np.float64)
+    assert b.shape == bw.shape and (bw > 0).all()
+    if b.sum() <= 0:
+        return 0.0
+    read = float((b / (bw * 1e9)).max())
+    write = float(b.sum()) / (bw[dst_domain] * 1e9)
+    return max(read, write)
+
+
 def transfer_time(
     shared_gb: float,
     weights: np.ndarray,

@@ -87,6 +87,31 @@ class DriftLedger:
         if self.observations % self.calibrate_every == 0:
             self.flush()
 
+    def observe_launches(self, kind: str, launches, probe) -> int:
+        """Bill a multi-launch (micro-batched) step one launch at a time.
+
+        A compute-follows-data step issues several launches, each reading
+        only its own domain-partitioned page set; attributing the *step's*
+        measurement to the *global* byte vector would credit every launch's
+        bottleneck time to domains it never touched, and calibration would
+        drag their ``bw_effective`` toward fiction. Instead each launch is
+        its own observation: ``launches`` is an iterable of
+        ``(bytes_per_domain, predicted_s)`` and ``probe(kind, bpd)``
+        measures that launch alone (scalar or per-domain vector; ``None``
+        skips). Returns the number of observations recorded — a launch
+        reading zero bytes bills nobody."""
+        n = 0
+        for bpd, predicted_s in launches:
+            bpd = np.asarray(bpd, dtype=np.float64)
+            if bpd.sum() <= 0:
+                continue
+            measured = probe(kind, bpd)
+            if measured is None:
+                continue
+            self.observe(kind, bpd, predicted_s, measured)
+            n += 1
+        return n
+
     def observe_scalar(self, kind: str, predicted_s: float,
                        measured_s: float) -> None:
         """Ratio-only observation for costs outside the per-domain model

@@ -27,12 +27,21 @@ class PageHeat:
 
     # -- hot path -------------------------------------------------------------
 
-    def touch(self, pages, weight: float = 1.0) -> None:
-        for p in pages:
+    def touch(self, pages, weight: float = 1.0, *, weights=None) -> None:
+        """Record one read of ``pages``.
+
+        ``weights`` (parallel to ``pages``) scales each page's increment by
+        the fraction of the page actually read — a sequence's partial last
+        page streams fewer bytes than an interior page and must not look
+        equally hot to the re-homing policy. Omitted, every page counts
+        ``weight`` (a full-page read).
+        """
+        ws = weights if weights is not None else (weight for _ in pages)
+        for p, w in zip(pages, ws):
             p = int(p)
             if p < 0:                # persisted handle: not a live page
                 continue
-            self._heat[p] = self._resolve(p) + weight
+            self._heat[p] = self._resolve(p) + float(w)
             self._stamp[p] = self.step_count
             self.touches += 1
 

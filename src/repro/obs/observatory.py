@@ -77,6 +77,19 @@ class Observatory:
             "repro_requests_total",
             "Request lifecycle transitions by view and priority class.",
             ("event", "view", "cls"))
+        self._launches = m.counter(
+            "repro_decode_launches_total",
+            "Decode launches by view and bottleneck domain ('global' = "
+            "one unpartitioned launch).", ("view", "domain"))
+        self._rehomed = m.counter(
+            "repro_rehomed_pages_total",
+            "Hot shared pages re-homed into fast domains, by view.",
+            ("view",))
+        self._heat_gauge = m.gauge(
+            "repro_page_heat",
+            "Resolved per-page heat stats by domain "
+            "(stat in pages/mean/p50/p95/max).", ("domain", "stat"))
+        self._engine_steps = 0
         for ev in self.fabric._subs:
             self.fabric.subscribe(ev, self._bus_handler(ev))
         self.fabric.attach_obs(self)
@@ -147,15 +160,41 @@ class Observatory:
     # -- engine step hook -----------------------------------------------------
 
     def on_engine_step(self, view, plan, batch, read_pages,
-                       predicted_s: float, t0: float, dt: float) -> None:
+                       predicted_s: float, t0: float, dt: float,
+                       launches=None, read_weights=None) -> None:
         """One engine step just advanced the clock from ``t0`` by ``dt``:
         trace spans for its prefill chunks and decode batch, touch heat,
-        and (with a probe) feed the drift ledger the batch-read pair."""
+        and (with a probe) feed the drift ledger the batch-read pair(s).
+
+        ``launches`` (micro-batch mode, DESIGN.md §11) is a list of
+        ``(domain, launch_read_pages, launch_predicted_s)`` — each launch
+        touches heat and bills drift *separately*, so a launch's
+        bottleneck time is never credited to domains it did not read.
+        ``read_weights`` maps pid -> fraction of the page the gather
+        streamed (bytes-weighted heat; a partial tail page is cooler than
+        a full interior page)."""
         self._note_now(view.name, t0 + dt)
+        self._engine_steps += 1
+        rw = read_weights or {}
         if self.heat is not None:
-            if read_pages:
-                self.heat.touch(read_pages)
+            for pages in ([rp for _, rp, _ in launches]
+                          if launches is not None else [read_pages]):
+                if pages:
+                    self.heat.touch(
+                        pages, weights=[rw.get(p, 1.0) for p in pages])
             self.heat.step()
+            # periodic Prometheus refresh of the heat histograms — every
+            # step would put an O(live pages) scan on the hot path
+            if self._engine_steps % 16 == 0:
+                self.refresh_heat_gauges()
+        if batch:
+            if launches is not None:
+                for dom, _rp, _t in launches:
+                    self._launches.labels(
+                        view.name,
+                        self.fabric.pool.domains[dom].name).inc()
+            else:
+                self._launches.labels(view.name, "global").inc()
         if self.tracer is not None:
             for seq, lo, hi in plan.prefill_chunks:
                 self.tracer.on_prefill(view.name, seq.sid, t0, dt, lo, hi)
@@ -163,11 +202,27 @@ class Observatory:
                 self.tracer.on_decode(view.name, seq.sid, t0, dt,
                                       seq.produced)
         if self.drift is not None and self.probe is not None and batch:
-            bpd = view.footprint(read_pages)
-            measured = self.probe("batch_read", bpd)
-            if measured is not None:
-                self.drift.observe("batch_read", bpd, predicted_s,
-                                   measured)
+            if launches is not None:
+                self.drift.observe_launches(
+                    "batch_read",
+                    [(view.footprint(rp), t) for _, rp, t in launches],
+                    self.probe)
+            else:
+                bpd = view.footprint(read_pages)
+                measured = self.probe("batch_read", bpd)
+                if measured is not None:
+                    self.drift.observe("batch_read", bpd, predicted_s,
+                                       measured)
+
+    def on_rehome(self, view, now: float, seconds: float,
+                  pages: int) -> None:
+        """The engine re-homed ``pages`` hot shared pages (DESIGN.md §11):
+        count them and put the migration span on the fabric track."""
+        self._note_now(view.name, now + seconds)
+        self._rehomed.labels(view.name).inc(pages)
+        if self.tracer is not None:
+            self.tracer.on_fabric("rehome", view.name, now,
+                                  dur_s=seconds, args={"pages": pages})
 
     # -- swap transfer hook ---------------------------------------------------
 
@@ -184,7 +239,17 @@ class Observatory:
 
     # -- reporting ------------------------------------------------------------
 
+    def refresh_heat_gauges(self) -> None:
+        """Fold the heat map's per-domain histograms into the labeled
+        ``repro_page_heat`` gauges (Prometheus text export)."""
+        if self.heat is None:
+            return
+        for dom, row in self.heat.per_domain().items():
+            for stat, val in row.items():
+                self._heat_gauge.labels(dom, stat).set(float(val))
+
     def snapshot(self) -> dict:
+        self.refresh_heat_gauges()
         out = {"metrics": self.metrics.snapshot()}
         if self.drift is not None:
             out["drift"] = self.drift.summary()

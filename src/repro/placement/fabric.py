@@ -582,6 +582,7 @@ class FabricView:
         self.persisted = 0             # this view's pages in the third tier
         self._held: dict[int, int] = {}
         self._assignment_cbs: list[Callable] = []
+        self._page_remap_cbs: list[Callable] = []
         pool = fabric.pool
         if adopted:
             self._cotuned = False
@@ -643,6 +644,13 @@ class FabricView:
 
     def domain_of(self, pid: int) -> int:
         return self.pool.domain_of(pid)
+
+    @property
+    def placement_policy(self) -> placement_policy.PlacementPolicy:
+        """The resolved policy instance steering this view — carries the
+        execution-mode flags (``micro_batch``/``rehome``) the scheduler
+        and engine read. Adopted views delegate to the pool's policy."""
+        return self.pool.policy if self._adopted else self._policy
 
     def capacity(self) -> int:
         """Pages this view may ever hold at once (its quota)."""
@@ -950,6 +958,121 @@ class FabricView:
             fab.owner[new] = name
         for v in fab.views.values():
             v._on_remap(old, new)
+
+    # -- heat-driven re-homing (DESIGN.md §11) ---------------------------------
+
+    def rehome_candidates(self, heat, *, min_heat: float = 1e-6
+                          ) -> list[tuple[int, float, float]]:
+        """Hot shared pages worth pulling into this view's fast domains.
+
+        ``migrate`` pins shared pages (moving one holder's copy would
+        strand the others), so a hot prefix allocated while the fast
+        domains were full stays in a slow domain forever — the exact
+        pages whose Eq.-1 read cost every sharer pays every step.
+        Re-homing lifts them with an *all-holders* remap instead.
+
+        Candidates are live pages owned by this view with refcount>1,
+        resident outside the home (fast) set, with resolved ``heat``
+        above ``min_heat``. Returns ``(pid, heat, heat * save_s)`` sorted
+        by expected near-future saving (descending): heat is a decayed
+        read count, so it is the natural estimate of how many more times
+        the page will be read; ``save_s`` is the per-read Eq.-1 saving of
+        serving it from the fastest home domain instead."""
+        pool = self.pool
+        fast = set(self.home)
+        bw = self.fabric.bw_effective
+        pb = float(self.page_bytes)
+        best = max(fast, key=lambda d: bw[d])
+        out = []
+        for pid in self.table.ref:
+            if self.fabric.owner.get(pid) != self.name:
+                continue                     # parked, persisted, or foreign
+            if not self.table.shared(pid):
+                continue
+            src = pool.domain_of(pid)
+            if src in fast:
+                continue
+            save = (pb / (bw[src] * 1e9)) - (pb / (bw[best] * 1e9))
+            if save <= 0:
+                continue
+            h = float(heat.value(pid))
+            if h <= min_heat:
+                continue
+            out.append((pid, h, h * save))
+        out.sort(key=lambda t: (-t[2], t[0]))
+        return out
+
+    def rehome_hot(self, heat, *, budget_s: float,
+                   max_pages: int | None = None
+                   ) -> tuple[dict[int, int], float]:
+        """Migrate the most profitable ``rehome_candidates`` into home
+        domains under an Eq.-1 move budget.
+
+        Selection walks candidates best-first, pricing the growing batch
+        with :func:`bwmodel.move_cost` (reads overlap across source
+        domains; every byte funnels into the destination). A candidate is
+        taken only if (a) the batch still fits ``budget_s`` and (b) its
+        *marginal* cost is covered by its expected saving ``heat *
+        save_s`` — so migration never exceeds the stall it saves.
+
+        The move itself is one batched executor copy followed by the
+        all-holders bookkeeping: ``table.remap_physical`` carries the
+        refcount and trie node, ``_ledger_remap`` carries ownership and
+        every view's holds, the vacated slow pages return to the shared
+        allocator, and every view's ``on_page_remap`` subscribers receive
+        the ``{old: new}`` map so schedulers can patch sequence page
+        lists. Emits one ``migrate`` event per page. Returns ``(moves,
+        seconds)``."""
+        pool = self.pool
+        bw = self.fabric.bw_effective
+        pb = float(self.page_bytes)
+        nd = len(pool.domains)
+        fast_order = sorted(self.home, key=lambda d: -bw[d])
+        moves: dict[int, int] = {}
+        bytes_by_src = np.zeros(nd)
+        cost = 0.0
+        for pid, h, _rank in self.rehome_candidates(heat):
+            if max_pages is not None and len(moves) >= max_pages:
+                break
+            dst_dom = next(
+                (d for d in fast_order
+                 if pool.free[d]
+                 and (self._adopted or self._headroom(d) > 0)), None)
+            if dst_dom is None:
+                break                        # fast domains full: try later
+            trial = bytes_by_src.copy()
+            trial[pool.domain_of(pid)] += pb
+            new_cost = bwmodel.move_cost(trial, bw, dst_dom)
+            if new_cost > budget_s:
+                break
+            marginal = new_cost - cost
+            save = (pb / (bw[pool.domain_of(pid)] * 1e9)
+                    - pb / (bw[dst_dom] * 1e9))
+            if h * save < marginal:
+                continue                     # not worth the transfer
+            moves[pid] = pool.free[dst_dom].pop()
+            bytes_by_src = trial
+            cost = new_cost
+        if not moves:
+            return {}, 0.0
+        src = list(moves)
+        dst = [moves[s] for s in src]
+        self.execute_copy(src, dst)
+        for s, d in zip(src, dst):
+            self.table.remap_physical(s, d)
+            self._ledger_remap(s, d)
+            pool.free[pool.domain_of(s)].append(s)
+            self.fabric.emit("migrate", view=self.name, src=s, dst=d)
+        for v in self.fabric.views.values():
+            for cb in v._page_remap_cbs:
+                cb(dict(moves))
+        return moves, cost
+
+    def on_page_remap(self, cb: Callable) -> None:
+        """Subscribe to all-holders re-homing: ``cb(moves)`` receives the
+        ``{old_pid: new_pid}`` map after physical ids change under live
+        sequences, so holders can patch their page lists."""
+        self._page_remap_cbs.append(cb)
 
     def execute_copy(self, src: list[int], dst: list[int]) -> None:
         """Batched physical copy through the migration executor (swap

@@ -18,6 +18,9 @@ Built-in policies (DESIGN.md §3.1):
 ``bwap_dwp``        canonical scaled by data-to-worker proximity (§III-B1)
 ``local_first``     fill domains fastest-first up to capacity (first-touch /
                     HBM-spill analogue; the baseline BWAP beats)
+``coda``            ``bwap_dwp`` placement + compute-follows-data execution:
+                    per-domain micro-batch decode and heat-driven re-homing
+                    of hot shared pages (DESIGN.md §11)
 ==================  =========================================================
 """
 
@@ -69,6 +72,14 @@ class PlacementPolicy:
     capacity-clamped integer page counts from them."""
 
     name: str = "?"
+    # execution-mode flags (DESIGN.md §11): a policy can ask the serving
+    # stack to *place work*, not just pages. ``micro_batch`` makes the
+    # scheduler partition each decode batch into per-domain launches;
+    # ``rehome`` makes the engine migrate hot shared pages into fast
+    # domains under an Eq.-1 budget. Placement-only policies leave both
+    # off; scheduler/engine read them via ``FabricView.placement_policy``.
+    micro_batch: bool = False
+    rehome: bool = False
 
     def weights(self, ctx: PlacementContext) -> np.ndarray:
         raise NotImplementedError
@@ -210,6 +221,21 @@ class LocalFirst(PlacementPolicy):
         if left > 0:
             raise ValueError("local_first: pages exceed aggregate capacity")
         return counts
+
+
+@register
+class Coda(BwapDwp):
+    """Compute-follows-data (DESIGN.md §11): ``bwap_dwp`` page placement
+    plus work placement — the scheduler partitions each decode step into
+    per-domain micro-batches (step stall = max over per-launch Eq.-1
+    bottlenecks instead of one global max) and the engine re-homes hot
+    shared pages (refcount>1, ranked by observatory heat) into fast
+    domains with an all-holders remap, budgeted so migration never
+    exceeds the stall it saves."""
+
+    name = "coda"
+    micro_batch = True
+    rehome = True
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,8 @@ import enum
 import itertools
 from typing import Sequence
 
+import numpy as np
+
 from repro.placement.fabric import as_view
 from repro.scheduler.slo import SloSpec, SloTracker
 from repro.scheduler.swap import KVSwapManager
@@ -94,13 +96,21 @@ class Request:
 @dataclasses.dataclass
 class StepPlan:
     """What one engine step executes, in order: prefill chunks, then decode
-    over ``batch``. Swaps already happened inside ``schedule()``."""
+    over ``batch``. Swaps already happened inside ``schedule()``.
+
+    ``launch_groups`` is the compute-follows-data assignment (DESIGN.md
+    §11): when the view's policy enables micro-batching, ``batch`` is
+    partitioned into ``(domain, requests)`` per-domain micro-batches —
+    each decodes in its own launch, so the step's Eq.-1 stall is the max
+    over per-launch bottlenecks instead of one global max. ``None`` means
+    one global launch (the classic path)."""
 
     prefill_chunks: list                 # (Request, lo, hi) token ranges
     batch: list                          # Requests to decode this step
     swapped_in: list
     swapped_out: list
     swap_seconds: float = 0.0
+    launch_groups: list | None = None    # [(domain, [Request, ...]), ...]
 
 
 class RequestScheduler:
@@ -126,9 +136,17 @@ class RequestScheduler:
                  stall_preempt_fraction: float | None = None,
                  stall_preempt_cooldown_s: float = 0.0,
                  spec_tokens: int = 0,
-                 conservative_admission: bool = False):
+                 conservative_admission: bool = False,
+                 micro_batch: bool | None = None):
         assert prefill_token_budget >= 1
         self.view = as_view(pool)        # the only placement surface
+        # compute-follows-data (DESIGN.md §11): partition each decode batch
+        # into per-domain micro-batches. Default follows the view's
+        # placement policy (the `coda` policy turns it on); an explicit
+        # bool overrides.
+        self.micro_batch = (bool(micro_batch) if micro_batch is not None
+                            else bool(getattr(self.view.placement_policy,
+                                              "micro_batch", False)))
         self.max_batch = max_batch
         self.prefill_token_budget = prefill_token_budget
         self.swap = swap
@@ -177,6 +195,9 @@ class RequestScheduler:
         # arbiter-driven allocation-cycle moves (co-scheduled DWP): re-home
         # live sequences when the view's assignment changes under us
         self.view.on_assignment_change(self._rehome_live)
+        # all-holders re-homing (DESIGN.md §11) changes physical ids under
+        # live sequences; patch every request's page list with the map
+        self.view.on_page_remap(self._apply_page_remap)
         self._ids = itertools.count()
         self.queued: list[Request] = []
         self.prefilling: list[Request] = []
@@ -262,6 +283,8 @@ class RequestScheduler:
         self._plan_prefills(plan)
         self._ensure_growth()
         plan.batch = list(self.running)
+        if self.micro_batch and len(plan.batch) > 1:
+            plan.launch_groups = self._launch_groups(plan.batch)
         self._plan = None
         if (not plan.batch and not plan.prefill_chunks
                 and not plan.swapped_in and not plan.swapped_out
@@ -528,6 +551,40 @@ class RequestScheduler:
                 self.prefilling.remove(r)
                 r.state = State.RUNNING
                 self.running.append(r)
+
+    def _launch_groups(self, batch) -> list | None:
+        """Partition the decode batch by Eq.-1 bottleneck domain
+        (DESIGN.md §11): each sequence joins the micro-batch of the domain
+        that gates *its own* read, so a launch's bottleneck bytes all
+        belong to its sequences and launches to different domain groups
+        overlap. The step stall becomes the max over per-launch
+        bottlenecks — never worse than the global max, and strictly
+        better whenever no single domain carries every launch's
+        bottleneck. Cross-launch traffic inside one domain is
+        second-order here; the drift ledger's per-launch billing absorbs
+        the residual model error into calibration. Returns ``None`` when
+        every sequence lands in one group (a global launch is identical
+        and skips the partition bookkeeping)."""
+        bw = self.view.bw * 1e9
+        fallback = int(np.argmax(bw))    # pageless sequence: fastest domain
+        groups: dict[int, list] = {}
+        for r in batch:
+            bpd = self.view.footprint(r.pages)
+            dom = int(np.argmax(bpd / bw)) if bpd.sum() > 0 else fallback
+            groups.setdefault(dom, []).append(r)
+        if len(groups) <= 1:
+            return None
+        return [(d, groups[d]) for d in sorted(groups)]
+
+    def _apply_page_remap(self, moves: dict) -> None:
+        """All-holders re-homing moved physical pages under us: swap the
+        old ids for the new ones in every live request's page list (a
+        queued request can hold trie-matched pages from the admission
+        probe; a swapped request's list keeps its *shared* pages live)."""
+        for r in (self.queued + self.prefilling + self.running
+                  + self.swapped):
+            if r.pages:
+                r.pages = [moves.get(p, p) for p in r.pages]
 
     def _rehome_live(self) -> None:
         """The view's allocation cycle moved under us (arbiter-driven

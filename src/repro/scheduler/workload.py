@@ -10,6 +10,15 @@ deterministic under a seed):
                 gaps (mean rate preserved) — stresses admission + preemption.
 ``heavy_tail``  Pareto interarrivals and prompt lengths — a few huge
                 requests among many small ones, the classic LLM-serving mix.
+``domain_skew`` a near-zero-gap flood of long-prompt requests fills the
+                fast domains first; a steady tail of short templated
+                requests (carrying the shared prefix) arrives while they
+                are full, so its pages land in slow domains — the
+                contention pattern heat-driven re-homing (DESIGN.md §11)
+                exists to fix.
+``hot_prefix``  steady arrivals that all share one long hot system
+                prompt — the maximally-shared-prefix stress for
+                all-holders re-homing and the prefix trie.
 
 ``generate`` yields a time-sorted list of :class:`TraceRequest`; the driver
 submits each to the scheduler with its arrival timestamp and the scheduler's
@@ -39,7 +48,7 @@ class WorkloadSpec:
     parameters are ignored by the other kinds.
     """
 
-    kind: str = "poisson"               # poisson | bursty | heavy_tail
+    kind: str = "poisson"  # poisson|bursty|heavy_tail|domain_skew|hot_prefix
     num_requests: int = 16
     mean_interarrival_s: float = 0.05
     prompt_mean: int = 12
@@ -53,6 +62,10 @@ class WorkloadSpec:
     burst_factor: float = 8.0           # gap/mean ratio between bursts
     # heavy_tail
     tail_alpha: float = 1.5             # Pareto shape (smaller = heavier)
+    # domain_skew: fraction of requests in the leading flood (long prompts,
+    # back-to-back, no shared prefix — they claim the fast domains); the
+    # rest arrive at the steady rate and carry the prefix machinery
+    skew_frac: float = 0.5
     # shared prefixes (any kind): with probability ``prefix_frac`` a request
     # prepends one of ``prefix_groups`` common prefixes of ``prefix_len``
     # tokens — the system prompt / few-shot template pattern that makes
@@ -68,10 +81,22 @@ class WorkloadSpec:
     prompt_loop_len: int = 0
 
 
+def _skew_head(spec: WorkloadSpec) -> int:
+    """Requests in the domain_skew leading flood (at least one, and at
+    least one steady-tail request remains)."""
+    return min(max(1, int(round(spec.num_requests * spec.skew_frac))),
+               spec.num_requests - 1)
+
+
 def _interarrivals(spec: WorkloadSpec, rng: np.random.Generator) -> np.ndarray:
     n, mean = spec.num_requests, spec.mean_interarrival_s
-    if spec.kind == "poisson":
+    if spec.kind in ("poisson", "hot_prefix"):
         return rng.exponential(mean, size=n)
+    if spec.kind == "domain_skew":
+        # leading flood back-to-back, then the steady tail
+        gaps = rng.exponential(mean, size=n)
+        gaps[:_skew_head(spec)] = mean / 100.0
+        return gaps
     if spec.kind == "bursty":
         # within a burst: near-zero gaps; between bursts: one long gap sized
         # so the long-run mean interarrival stays ``mean``
@@ -99,6 +124,10 @@ def _prompt_lengths(spec: WorkloadSpec, rng: np.random.Generator) -> np.ndarray:
     else:
         # lognormal around the mean: multiplicative spread, never < 1
         lens = rng.lognormal(np.log(max(spec.prompt_mean, 1)), 0.4, size=n)
+    if spec.kind == "domain_skew":
+        # the flood is all long prompts — it must actually fill the fast
+        # domains before the steady tail shows up
+        lens[:_skew_head(spec)] = spec.prompt_max
     return np.clip(np.round(lens), 1, spec.prompt_max).astype(np.int64)
 
 
@@ -111,13 +140,22 @@ def generate(spec: WorkloadSpec) -> list[TraceRequest]:
     probs = np.asarray([p for _, p in spec.class_mix], dtype=np.float64)
     probs = probs / probs.sum()
     classes = rng.choice(len(names), size=spec.num_requests, p=probs)
+    # hot_prefix with no explicit prefix config defaults to one long
+    # shared system prompt every request carries
+    plen, pgroups, pfrac = (spec.prefix_len, spec.prefix_groups,
+                            spec.prefix_frac)
+    if spec.kind == "hot_prefix" and plen == 0:
+        plen, pgroups, pfrac = 2 * spec.prompt_mean, 1, 1.0
     prefixes = [tuple(int(t) for t in
-                      rng.integers(1, spec.vocab_size, spec.prefix_len))
-                for _ in range(spec.prefix_groups)] if spec.prefix_len else []
+                      rng.integers(1, spec.vocab_size, plen))
+                for _ in range(pgroups)] if plen else []
+    skew_head = _skew_head(spec) if spec.kind == "domain_skew" else 0
     out = []
     for i in range(spec.num_requests):
         head: tuple[int, ...] = ()
-        if prefixes and rng.uniform() < spec.prefix_frac:
+        # domain_skew: the flood carries no prefix (and consumes no rng
+        # draws for it) — only the steady tail shares the template
+        if prefixes and i >= skew_head and rng.uniform() < pfrac:
             head = prefixes[int(rng.integers(len(prefixes)))]
         n = int(lens[i])
         if spec.prompt_loop_len > 0:

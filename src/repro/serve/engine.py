@@ -197,7 +197,9 @@ class ServeEngine:
                  wall_clock: bool = True, sim_step_s: float = 0.0,
                  incremental_prefill: bool = True,
                  prefix_reuse: bool = True,
-                 drafter=None):
+                 drafter=None,
+                 rehome: bool | None = None,
+                 rehome_budget_frac: float = 0.5):
         self.cfg = cfg
         self.view = as_view(pool)        # the only placement surface
         self.model = LM(cfg)
@@ -225,6 +227,19 @@ class ServeEngine:
         if drafter is not None:
             self.scheduler.spec_tokens = max(self.scheduler.spec_tokens,
                                              drafter.max_tokens)
+        # heat-driven re-homing (DESIGN.md §11): after each decode step,
+        # migrate the hottest shared slow-domain pages into fast domains
+        # under an Eq.-1 budget of `rehome_budget_frac` of the step's
+        # measured stall — migration can never exceed the stall it saves.
+        # Default follows the view's policy (the `coda` policy turns it
+        # on); an explicit bool overrides. Heat comes from the attached
+        # observatory when it has one, else from a private PageHeat.
+        self.rehome = (bool(rehome) if rehome is not None
+                       else bool(getattr(self.view.placement_policy,
+                                         "rehome", False)))
+        self.rehome_budget_frac = float(rehome_budget_frac)
+        self._heat = None
+        self.rehomed_pages = 0
         self.prefill_tokens_computed = 0   # forward-pass tokens spent on
         self.prefill_chunks_run = 0        # prefill (the O(n) vs O(n²) gap)
         self.decode_steps = 0              # steps that ran a decode batch
@@ -333,12 +348,17 @@ class ServeEngine:
             return {"active": 0, "pending": len(self.scheduler.pending)}
         done: list[Sequence_] = []
         produced_before = {s.sid: s.produced for s in batch}
+        groups = plan.launch_groups
         if batch:
             drafts = self._draft(batch)
             if drafts is not None:
+                # the verify path fuses the whole batch into one
+                # prefill-mode launch; micro-batching applies to plain
+                # greedy decode only
+                groups = None
                 self._verify_step(batch, drafts)
             else:
-                self._greedy_step(batch)
+                self._greedy_step(batch, groups)
             self.decode_steps += 1
             for s in batch:
                 if s.produced >= s.max_new:
@@ -358,18 +378,37 @@ class ServeEngine:
         # physical page once per launch).
         read_pages = list(dict.fromkeys(
             p for s in batch for p in s.pages)) if batch else []
-        sim = max(self.view.expected_read_time(read_pages), 0.0) \
-            if batch else 0.0
+        launches = None
+        if batch and groups is not None:
+            # compute-follows-data: one Eq.-1 bill per launch — the step
+            # stall is the max over per-launch bottlenecks, since launches
+            # to different domain groups overlap (DESIGN.md §11)
+            launches = []
+            for dom, grp in groups:
+                rp = list(dict.fromkeys(p for s in grp for p in s.pages))
+                launches.append(
+                    (dom, rp,
+                     max(self.view.expected_read_time(rp), 0.0)))
+            sim = max(t for _, _, t in launches)
+        elif batch:
+            sim = max(self.view.expected_read_time(read_pages), 0.0)
+        else:
+            sim = 0.0
         dt = ((wall if self.wall_clock else 0.0) + sim + plan.swap_seconds
               + (self.sim_step_s if batch else 0.0))
         v0 = self.scheduler.now
         self.scheduler.advance(dt)
+        # bytes-weighted heat: a sequence's partial tail page streams
+        # fewer bytes than an interior page and must not look equally hot
+        read_weights = self._page_read_weights(batch) if batch else {}
         obs = self.view.fabric.obs
         if obs is not None:
             # spans for this step's prefill chunks + decode batch, page
-            # heat touches, and (probe-equipped) the batch-read drift pair
+            # heat touches, and (probe-equipped) the batch-read drift
+            # pairs — one per launch in micro-batch mode
             obs.on_engine_step(self.view, plan, batch, read_pages,
-                               sim, v0, dt)
+                               sim, v0, dt, launches=launches,
+                               read_weights=read_weights)
         for s in batch:
             if produced_before[s.sid] == 0 and s.produced > 0:
                 self.scheduler.notice_first_token(s)
@@ -388,9 +427,14 @@ class ServeEngine:
                 for s in self.scheduler.running:
                     s.pages = self.view.migrate(s.pages)
                 moved = True
+        rehomed = 0
+        if self.rehome and batch:
+            rehomed = self._rehome_step(obs, read_pages, read_weights, sim)
         tel = self.view.snapshot()
         return {"active": len(self.scheduler.running),
-                "latency": dt, "migrated": moved,
+                "latency": dt, "migrated": moved, "rehomed": rehomed,
+                "launches": (len(groups) if groups is not None
+                             else (1 if batch else 0)),
                 "dwp": self.view.dwp,
                 "occupancy": self.view.occupancy(),
                 "swapped": len(self.scheduler.swapped),
@@ -424,30 +468,100 @@ class ServeEngine:
             drafts.append([int(t) for t in d])
         return drafts if any(drafts) else None
 
-    def _greedy_step(self, batch) -> None:
+    def _greedy_step(self, batch, groups=None) -> None:
         ps = self.view.page_size
         # grow pages where needed (the scheduler reserved capacity);
         # a decode write into a shared page — the full-prompt-match
-        # case: position prompt_len-1 lives in a trie page — forks it
+        # case: position prompt_len-1 lives in a trie page — forks it.
+        # Growth always runs over the FULL batch in global order — even in
+        # micro-batch mode — so page ids (and therefore everything
+        # downstream) are bit-identical to a single global launch.
         for s in batch:
             if s.length % ps == 0:
                 self.view.append_page(s.pages)
             else:
                 self.view.fork_for_write(s.pages, s.length // ps)
-        mp = max(len(s.pages) for s in batch)
-        tables = np.zeros((len(batch), mp), np.int32)
-        for i, s in enumerate(batch):
+        if groups is not None:
+            # compute-follows-data (DESIGN.md §11): one launch per domain
+            # group. Each row's attention reads only its own page table and
+            # argmax is per-row, so the partition cannot change tokens.
+            for _dom, grp in groups:
+                self._decode_launch(grp)
+        else:
+            self._decode_launch(batch)
+        self.tokens_emitted += len(batch)
+
+    def _decode_launch(self, seqs) -> None:
+        """One decode launch over ``seqs`` (the whole batch, or one
+        per-domain micro-batch)."""
+        mp = max(len(s.pages) for s in seqs)
+        tables = np.zeros((len(seqs), mp), np.int32)
+        for i, s in enumerate(seqs):
             tables[i, :len(s.pages)] = s.pages
-        lens = np.asarray([s.length for s in batch], np.int32)
-        toks = np.asarray([[s.tokens[-1]] for s in batch], np.int32)
+        lens = np.asarray([s.length for s in seqs], np.int32)
+        toks = np.asarray([[s.tokens[-1]] for s in seqs], np.int32)
         logits = self.decoder.decode_step(
             jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(lens),
             jnp.asarray(lens))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for s, t in zip(batch, nxt):
+        for s, t in zip(seqs, nxt):
             s.tokens.append(int(t))
             s.length += 1          # the decoded token's K/V is now pooled
-        self.tokens_emitted += len(batch)
+
+    # -- compute-follows-data: heat + re-homing (DESIGN.md §11) ---------------
+
+    def _page_read_weights(self, batch) -> dict[int, float]:
+        """Fraction of each physical page this step's gather actually
+        streamed: interior pages read in full, a sequence's tail page only
+        up to its committed length. A page that is one holder's partial
+        tail but another's interior counts as a full read."""
+        ps = self.view.page_size
+        out: dict[int, float] = {}
+        for s in batch:
+            for i, p in enumerate(s.pages):
+                if p < 0:
+                    continue
+                frac = min(1.0, max(0.0, (s.length - i * ps) / ps))
+                if frac > out.get(p, 0.0):
+                    out[p] = frac
+        return out
+
+    def _own_heat(self):
+        """Private heat map for policy-driven re-homing when no
+        observatory (or a heatless one) is attached."""
+        if self._heat is None:
+            from repro.obs.heat import PageHeat
+            heat = PageHeat(self.view.pool)
+            self.view.fabric.subscribe(
+                "free", lambda page=-1, **_: heat.on_free(page=page))
+            self._heat = heat
+        return self._heat
+
+    def _rehome_step(self, obs, read_pages, read_weights, sim) -> int:
+        """Post-step re-homing: pull the hottest shared slow-domain pages
+        into fast domains, spending at most ``rehome_budget_frac`` of this
+        step's Eq.-1 stall. The spent seconds advance the virtual clock —
+        migration traffic is real traffic."""
+        if obs is not None and obs.heat is not None:
+            heat = obs.heat          # the observatory already touched it
+        else:
+            heat = self._own_heat()
+            heat.touch(read_pages,
+                       weights=[read_weights.get(p, 1.0)
+                                for p in read_pages])
+            heat.step()
+        budget = self.rehome_budget_frac * sim
+        if budget <= 0.0:
+            return 0
+        moves, secs = self.view.rehome_hot(heat, budget_s=budget)
+        if not moves:
+            return 0
+        v0 = self.scheduler.now
+        self.scheduler.advance(secs)
+        self.rehomed_pages += len(moves)
+        if obs is not None:
+            obs.on_rehome(self.view, v0, secs, len(moves))
+        return len(moves)
 
     def _verify_step(self, batch, drafts) -> None:
         """Speculative multi-token decode (DESIGN.md §7). Per sequence the

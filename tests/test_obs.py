@@ -477,12 +477,14 @@ def test_artifacts_check_validates_schema_and_finiteness(tmp_path):
         artifacts.check([name], root=tmp_path)
     # non-finite numbers
     (tmp_path / name).write_text(
-        '{"calibration": {"x": NaN}, "overhead": {}}')
+        '{"calibration": {"x": NaN}, "calibration_micro": {}, '
+        '"overhead": {}}')
     with pytest.raises(SystemExit, match="non-finite"):
         artifacts.check([name], root=tmp_path)
     # valid
     (tmp_path / name).write_text(
-        json.dumps({"calibration": {"x": 1.0}, "overhead": {"y": 2}}))
+        json.dumps({"calibration": {"x": 1.0}, "calibration_micro": {},
+                    "overhead": {"y": 2}}))
     artifacts.check([name], root=tmp_path)
     # every schema name is covered by EXPECTED and vice versa
     assert set(artifacts.EXPECTED) == set(artifacts.SCHEMAS)
