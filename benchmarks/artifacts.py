@@ -45,6 +45,9 @@ SCHEMAS: dict[str, tuple[str, ...]] = {
     # scheduler_bench.coda_compare: micro-batch decode + re-homing
     "BENCH_coda.json": ("coda", "global", "goodput_ratio",
                         "token_identical"),
+    # scheduler_bench.zoo_compare: capacity market across page geometries
+    "BENCH_zoo.json": ("market", "static", "goodput_ratio",
+                       "token_identical"),
 }
 
 EXPECTED = tuple(SCHEMAS)

@@ -625,6 +625,134 @@ def coda_compare(seed: int = 0, check: bool = True) -> dict:
     return rows
 
 
+def zoo_compare(seed: int = 0, check: bool = True) -> dict:
+    """Capacity market vs static partitions across three page geometries
+    (ISSUE 9, CI-gated; DESIGN.md §12).
+
+    One byte arena hosts a chat transformer (paged K/V, bursting), an
+    idle ASR tenant (read-only encoder K/V, a few resident utterances),
+    and an idle SSM tenant (1-page constant state). The market run lets
+    the chat burst annex the idle groups' funding at its Eq.-1 stall
+    price and repay on drain; the static run pins each group to its
+    share. Virtual-clock deterministic.
+
+    Gates: chat tokens and ASR/SSM state digests identical across modes,
+    zero failures; >= 1 lease granted from an idle group and fully
+    repaid (outstanding 0, funding restored); market chat goodput
+    >= 1.2x static; zoo byte ledgers balanced throughout."""
+    from repro.placement.geometry import encoder_kv_geometry
+    from repro.placement.zoo import ByteDomain, PageFabricZoo
+    from repro.serve.zoo import EncoderKVDriver, SSMStateDriver, ZooServer
+
+    chat_cfg = dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                                   num_layers=1, compute_dtype="float32")
+    ssm_cfg = registry.get_smoke_config("xlstm-125m")
+    asr_cfg = registry.get_smoke_config("whisper-tiny")
+    params = LM(chat_cfg).init(jax.random.PRNGKey(0))
+    arena = [ByteDomain("hbm_local", 64 * 1024, 819.0, True),
+             ByteDomain("host_dram", 192 * 1024, 8.0)]
+    rng = np.random.default_rng(seed)
+    # 12 requests x 12 pages peak = 144 pages vs 64 funded: the static
+    # run decodes in waves, the market run annexes idle ASR/SSM funding
+    # and runs the whole burst concurrently
+    prompts = [rng.integers(1, chat_cfg.vocab_size, 16).tolist()
+               for _ in range(12)]
+
+    def run(market: bool) -> dict:
+        zoo = PageFabricZoo(arena, seed=seed)
+        chat = zoo.register("chat", chat_cfg, share=0.25, page_size=4,
+                            dwp_config=DWPConfig(n=10 ** 6, c=1))
+        zoo.register("ssm", ssm_cfg, share=0.25)
+        zoo.register("asr", asr_cfg, share=0.5, page_size=4,
+                     geometry=encoder_kv_geometry(asr_cfg, 4))
+        start_quota = {n: g.view.quota.copy()
+                       for n, g in zoo.groups.items()}
+        srv = ZooServer(zoo, market=market)
+        ssm_drv = SSMStateDriver(zoo.groups["ssm"].view, sessions=1)
+        asr_drv = EncoderKVDriver(zoo.groups["asr"].view, utterances=3)
+        asr_drv.attach(0)              # one decode session reads along
+        srv.add_driver("ssm", ssm_drv)
+        srv.add_driver("asr", asr_drv)
+        eng = ServeEngine(chat_cfg, params, chat.view, wall_clock=False,
+                          sim_step_s=0.005,
+                          scheduler=RequestScheduler(
+                              chat.view, max_batch=12,
+                              prefill_token_budget=64,
+                              default_max_new=32,
+                              conservative_admission=True))
+        srv.add_engine("chat", eng)
+        for p in prompts:              # the burst: everything at once
+            eng.submit(list(p))
+        steps = srv.drain()
+        # market and static drains take different step counts; bring the
+        # perpetual SSM recurrence to a fixed step so digests compare
+        assert ssm_drv.steps < 512
+        while ssm_drv.steps < 512:
+            ssm_drv.step()
+        zoo.check_invariants()
+        idle_leases = [ln for ln in zoo.leases
+                       if ln.granted_bytes > 0 and ln.lender != "chat"]
+        slo = eng.scheduler.slo.summary(eng.scheduler.now)
+        return {
+            "market": market,
+            "steps": steps,
+            "finished": len(eng.finished),
+            "failed": len(prompts) - len(eng.finished),
+            "goodput_tok_s": slo["goodput_tok_s"],
+            "makespan_s": eng.scheduler.now,
+            "granted_bytes": sum(ln.granted_bytes for ln in zoo.leases),
+            "repaid_bytes": sum(ln.repaid_bytes for ln in zoo.leases),
+            "outstanding_bytes": zoo.outstanding_bytes(),
+            "idle_lenders": sorted({ln.lender for ln in idle_leases}),
+            "funding_restored": all(
+                (zoo.groups[n].view.quota == q).all()
+                for n, q in start_quota.items()),
+            "tokens": [list(s.tokens) for s in
+                       sorted(eng.finished, key=lambda s: s.sid)],
+            "ssm_digests": ssm_drv.digests(),
+            "asr_digests": asr_drv.digests(),
+        }
+
+    mkt, sta = run(True), run(False)
+    ratio = mkt["goodput_tok_s"] / max(sta["goodput_tok_s"], 1e-9)
+    for r in (mkt, sta):
+        mode = "market" if r["market"] else "static"
+        print(f"  {mode:6s} chat goodput {r['goodput_tok_s']:7.1f} tok/s "
+              f"makespan {r['makespan_s']:.3f}s  steps {r['steps']:3d}  "
+              f"annexed {r['granted_bytes'] / 1024:5.1f} KiB from "
+              f"{r['idle_lenders'] or '-'}  repaid "
+              f"{r['repaid_bytes'] / 1024:5.1f} KiB  failed {r['failed']}")
+    identical = (mkt["tokens"] == sta["tokens"]
+                 and mkt["ssm_digests"] == sta["ssm_digests"]
+                 and mkt["asr_digests"] == sta["asr_digests"])
+    print(f"-> capacity market vs static partitions: {ratio:.2f}x chat "
+          f"goodput (token-identical per model: {identical})")
+    if check:
+        assert identical, \
+            "the capacity market changed tokens or state digests"
+        assert mkt["failed"] == sta["failed"] == 0
+        assert mkt["idle_lenders"], \
+            "market never annexed an idle group's funding"
+        assert mkt["granted_bytes"] > 0 \
+            and mkt["repaid_bytes"] == mkt["granted_bytes"] \
+            and mkt["outstanding_bytes"] == 0, \
+            "annexed funding was not fully repaid on recall"
+        assert mkt["funding_restored"], \
+            "group funding did not return to its registered shares"
+        assert sta["granted_bytes"] == 0
+        assert ratio >= 1.2, (
+            f"capacity market must lift chat goodput >= 1.2x static "
+            f"partitions (got {ratio:.2f}x)")
+    rows = {"market": {k: v for k, v in mkt.items()
+                       if k not in ("tokens", "ssm_digests", "asr_digests")},
+            "static": {k: v for k, v in sta.items()
+                       if k not in ("tokens", "ssm_digests", "asr_digests")},
+            "goodput_ratio": ratio,
+            "token_identical": identical}
+    artifacts.dump("BENCH_zoo.json", rows)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -634,6 +762,7 @@ def main() -> None:
     ap.add_argument("--skip-fabric", action="store_true")
     ap.add_argument("--skip-persist", action="store_true")
     ap.add_argument("--skip-coda", action="store_true")
+    ap.add_argument("--skip-zoo", action="store_true")
     args = ap.parse_args()
     compare(args.requests, args.new, args.seed)
     if not args.skip_prefix:
@@ -650,6 +779,9 @@ def main() -> None:
         print("\ncompute-follows-data — micro-batch decode + re-homing "
               "vs global batching")
         coda_compare(seed=args.seed)
+    if not args.skip_zoo:
+        print("\npage-geometry zoo — capacity market vs static partitions")
+        zoo_compare(seed=args.seed)
 
 
 if __name__ == "__main__":

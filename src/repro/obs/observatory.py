@@ -43,6 +43,11 @@ class Observatory:
                  drift: bool = True, probe=None, calibrate_every: int = 4,
                  heat_decay: float = 0.9):
         self.fabric = _resolve_fabric(target)
+        # model-group prefix on view labels (DESIGN.md §12): zoo member
+        # fabrics carry fabric.group, so one Prometheus scrape over many
+        # groups stays unambiguous; single-group fabrics ("" — the whole
+        # PR 1-8 surface) keep their labels bit-identical
+        self._group = getattr(self.fabric, "group", "")
         self.metrics = self.fabric.telemetry.metrics
         self.tracer = SpanTracer() if tracer else None
         self.heat = PageHeat(self.fabric.pool, decay=heat_decay) if heat \
@@ -94,6 +99,11 @@ class Observatory:
             self.fabric.subscribe(ev, self._bus_handler(ev))
         self.fabric.attach_obs(self)
 
+    def _vlabel(self, view) -> str:
+        name = view if isinstance(view, str) else \
+            getattr(view, "name", str(view))
+        return f"{self._group}/{name}" if self._group else (name or "")
+
     # -- virtual clock --------------------------------------------------------
 
     def _note_now(self, view: str, now: float) -> None:
@@ -112,17 +122,20 @@ class Observatory:
             view = kw.get("view")
             if event in ("alloc", "free"):
                 dom = self.fabric.pool.domains[kw["domain"]].name
-                self._page_events.labels(event, view or "", dom).inc()
+                self._page_events.labels(event, self._vlabel(view or ""),
+                                         dom).inc()
                 if event == "free" and self.heat is not None:
                     self.heat.on_free(page=kw["page"])
             elif event == "migrate":
-                self._migrations.labels(view).inc()
+                self._migrations.labels(self._vlabel(view)).inc()
             elif event == "share":
                 self._shares.labels(kw["kind"]).inc()
             elif event == "latency":
-                self._latency_hist.labels(view).observe(kw["seconds"])
+                self._latency_hist.labels(
+                    self._vlabel(view)).observe(kw["seconds"])
             elif event in ("demote", "promote", "restore"):
-                self._tier_ops.labels(event, view).inc(kw["pages"])
+                self._tier_ops.labels(event, self._vlabel(view)).inc(
+                    kw["pages"])
                 if self.tracer is not None:
                     self.tracer.on_fabric(
                         event, view, self._now(view),
@@ -134,26 +147,26 @@ class Observatory:
 
     def on_admit(self, view, r, now: float) -> None:
         self._note_now(view.name, now)
-        self._requests.labels("admit", view.name, r.cls).inc()
+        self._requests.labels("admit", self._vlabel(view), r.cls).inc()
         if self.tracer is not None:
             self.tracer.on_admit(view.name, r.sid, r.arrival_s, r.cls)
 
     def on_preempt(self, view, r, now: float, seconds: float,
                    pages: int) -> None:
         self._note_now(view.name, now)
-        self._requests.labels("preempt", view.name, r.cls).inc()
+        self._requests.labels("preempt", self._vlabel(view), r.cls).inc()
         if self.tracer is not None:
             self.tracer.on_swap_out(view.name, r.sid, now, seconds, pages)
 
     def on_resume(self, view, r, now: float, seconds: float) -> None:
         self._note_now(view.name, now)
-        self._requests.labels("resume", view.name, r.cls).inc()
+        self._requests.labels("resume", self._vlabel(view), r.cls).inc()
         if self.tracer is not None:
             self.tracer.on_swap_in(view.name, r.sid, now, seconds)
 
     def on_finish(self, view, r, now: float) -> None:
         self._note_now(view.name, now)
-        self._requests.labels("finish", view.name, r.cls).inc()
+        self._requests.labels("finish", self._vlabel(view), r.cls).inc()
         if self.tracer is not None:
             self.tracer.on_finish(view.name, r.sid, now, r.produced)
 
@@ -191,10 +204,10 @@ class Observatory:
             if launches is not None:
                 for dom, _rp, _t in launches:
                     self._launches.labels(
-                        view.name,
+                        self._vlabel(view),
                         self.fabric.pool.domains[dom].name).inc()
             else:
-                self._launches.labels(view.name, "global").inc()
+                self._launches.labels(self._vlabel(view), "global").inc()
         if self.tracer is not None:
             for seq, lo, hi in plan.prefill_chunks:
                 self.tracer.on_prefill(view.name, seq.sid, t0, dt, lo, hi)
@@ -219,7 +232,7 @@ class Observatory:
         """The engine re-homed ``pages`` hot shared pages (DESIGN.md §11):
         count them and put the migration span on the fabric track."""
         self._note_now(view.name, now + seconds)
-        self._rehomed.labels(view.name).inc(pages)
+        self._rehomed.labels(self._vlabel(view)).inc(pages)
         if self.tracer is not None:
             self.tracer.on_fabric("rehome", view.name, now,
                                   dur_s=seconds, args={"pages": pages})

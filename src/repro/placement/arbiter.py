@@ -113,8 +113,11 @@ class DomainArbiter:
         else:
             assert cfg is self._cfg or cfg == self._cfg, (
                 "one fabric serves one model group: tenants of a different "
-                "model need their own arbiter/fabric (physical page sharing "
-                "requires identical K/V geometry)")
+                "model need their own fabric — physical page sharing "
+                "requires identical page geometry. Co-locate heterogeneous "
+                "groups through placement.zoo.PageFabricZoo, whose capacity "
+                "market trades funding between per-group fabrics in bytes "
+                "(DESIGN.md §12)")
         return self.fabric
 
     #: tenant priority -> scheduler class level (HIGH preempts best-effort)

@@ -98,13 +98,17 @@ class MemoryFabric:
                  page_size: int = 16, seed: int = 0,
                  policy: str = "bwap_dwp",
                  telemetry: DomainTelemetry | None = None,
-                 calibration_alpha: float = 0.25):
+                 calibration_alpha: float = 0.25,
+                 geometry=None, group: str = ""):
         self.cfg = cfg
         self.seed = seed
         self.policy_name = policy
+        # model-group label (zoo member fabrics set it; "" = single-group,
+        # which keeps every metric label bit-identical to pre-zoo runs)
+        self.group = group
         self.pool = BwapPagePool(cfg, domains, page_size=page_size,
                                  seed=seed, policy=policy,
-                                 telemetry=telemetry)
+                                 telemetry=telemetry, geometry=geometry)
         self.table = self.pool.table
         self.telemetry = self.pool.telemetry
         self.views: dict[str, FabricView] = {}
@@ -134,6 +138,7 @@ class MemoryFabric:
         fab.cfg = pool.cfg
         fab.seed = 0
         fab.policy_name = "adopted"
+        fab.group = ""
         fab.pool = pool
         fab.table = pool.table
         fab.telemetry = pool.telemetry
@@ -532,6 +537,15 @@ class MemoryFabric:
         free = sum(len(f) for f in self.pool.free)
         assert free + len(self.owner) + int(self.pool.reserved.sum()) \
             == self.pool.total_pages, "page ids not conserved"
+        # byte-denominated ledger balance (DESIGN.md §12): every page of
+        # this fabric carries the group geometry's page_bytes, so view
+        # byte ledgers must sum to exactly the owned physical bytes
+        pb = int(self.pool.page_bytes)
+        assert sum(v.used_bytes() for v in self.views.values()) \
+            == len(self.owner) * pb, "view byte ledgers != owned bytes"
+        assert (free + int(self.pool.reserved.sum())) * pb \
+            + sum(v.used_bytes() for v in self.views.values()) \
+            == self.pool.total_pages * pb, "fabric bytes not conserved"
 
     def stats(self) -> dict:
         out = {
@@ -548,6 +562,8 @@ class MemoryFabric:
                 "quota": v.quota.tolist(),
                 "used": v.used.tolist(),
                 "reserved": v.reserved.tolist(),
+                "quota_bytes": v.quota_bytes(),
+                "used_bytes": v.used_bytes(),
                 "held_logical": int(sum(v._held.values())),
                 "persisted": int(v.persisted),
                 "level": v.level,
@@ -624,6 +640,21 @@ class FabricView:
     @property
     def page_bytes(self) -> int:
         return self.pool.page_bytes
+
+    @property
+    def geometry(self):
+        """This group's :class:`~repro.placement.geometry.PageGeometry`
+        (growth law, shareability class, bytes per page)."""
+        return self.pool.geometry
+
+    def quota_bytes(self) -> int:
+        """Byte-denominated funding of this view (DESIGN.md §12) — the
+        ledger unit the capacity market trades in."""
+        return int(self.quota.sum()) * int(self.page_bytes)
+
+    def used_bytes(self) -> int:
+        """Bytes of physical pages currently charged to this view."""
+        return int(self.used.sum()) * int(self.page_bytes)
 
     @property
     def domains(self):
@@ -795,6 +826,28 @@ class FabricView:
         ps = self.page_size
         for idx in range(lo_tok // ps, -(-hi_tok // ps)):
             self.fork_for_write(pages, idx)
+
+    def fork_sequence(self, pages: Sequence[int]) -> list[int]:
+        """Geometry-aware whole-sequence fork (DESIGN.md §12).
+
+        Shareable geometries fork lazily: every page's refcount bumps and
+        later writes go through the normal ``fork_for_write`` CoW path.
+        Non-shareable constant state (SSM) forks eagerly — recurrent
+        state is mutated in place every step, so a CoW chain would alias
+        live state; the clone gets fresh pages with the state bytes
+        copied now through the migration executor."""
+        if self.geometry.shareable:
+            out = list(pages)
+            for pid in out:
+                self.table.ref[pid] += 1
+                self._hold(pid)
+            return out
+        out: list[int] = []
+        for pid in pages:
+            self.append_page(out)
+        if out:
+            self.execute_copy(list(pages), out)
+        return out
 
     # -- prefix sharing ---------------------------------------------------------
 

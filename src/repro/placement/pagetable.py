@@ -71,6 +71,12 @@ class PageTable:
     def __init__(self, pool, prefix_reuse: bool = True):
         self.pool = pool
         self.prefix_reuse = prefix_reuse
+        # the group geometry's shareability class gates the trie outright:
+        # non-shareable pages (SSM state, mutated in place every step) must
+        # never be matched into another sequence, whatever prefix_reuse
+        # callers later toggle on this table
+        self._shareable = bool(
+            getattr(getattr(pool, "geometry", None), "shareable", True))
         self.ref: dict[int, int] = {}
         self._nodes: dict[int, _TrieNode] = {}
         self._index: dict[tuple[int, tuple], int] = {}   # key -> node id
@@ -154,7 +160,7 @@ class PageTable:
         assert not view, "prefix match must seed an empty view"
         if count:
             self.prefix_probes += 1
-        if not self.prefix_reuse:
+        if not (self.prefix_reuse and self._shareable):
             return 0
         ps = self.pool.page_size
         parent = ROOT
@@ -179,7 +185,7 @@ class PageTable:
         probe would cover right now, bumping no refcounts and touching no
         telemetry. Trie-aware admission calls this at submit time to size a
         request's physical (post-sharing) footprint."""
-        if not self.prefix_reuse:
+        if not (self.prefix_reuse and self._shareable):
             return 0
         ps = self.pool.page_size
         parent = ROOT
@@ -201,7 +207,7 @@ class PageTable:
         ``tokens[:upto_tokens]`` (i.e. whose K/V is final). Idempotent along
         already-registered chains; first writer wins on races (a page that
         lost the race simply stays private). Returns pages registered."""
-        if not self.prefix_reuse:
+        if not (self.prefix_reuse and self._shareable):
             return 0
         ps = self.pool.page_size
         parent = ROOT

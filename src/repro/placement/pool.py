@@ -30,6 +30,7 @@ from repro.core.dwp import DWPConfig, DWPTuner
 from repro.models.config import ModelConfig
 from repro.placement import policy as placement_policy
 from repro.placement.executor import MigrationExecutor
+from repro.placement.geometry import PageGeometry, geometry_for
 from repro.placement.pagetable import PageTable
 from repro.placement.telemetry import DomainTelemetry
 
@@ -71,18 +72,26 @@ class BwapPagePool:
     def __init__(self, cfg: ModelConfig, domains: Sequence[MemoryDomain],
                  page_size: int = 16, dwp_config: DWPConfig | None = None,
                  seed: int = 0, policy: str = "bwap_dwp",
-                 tuner=None, telemetry: DomainTelemetry | None = None):
+                 tuner=None, telemetry: DomainTelemetry | None = None,
+                 geometry: PageGeometry | None = None):
         self.cfg = cfg
         self.domains = list(domains)
         self.page_size = page_size
         self.policy = placement_policy.resolve(policy)
         self.total_pages = sum(d.num_pages for d in self.domains)
         self.offsets = np.cumsum([0] + [d.num_pages for d in self.domains])
+        # what one page *is* for this model group (DESIGN.md §12); the
+        # default resolved from cfg reproduces the historical dense
+        # [nl, pages, page_size, nkv, hd] layout bit-for-bit
+        self.geometry = geometry if geometry is not None \
+            else geometry_for(cfg, page_size)
+        # the growth unit is the geometry's (identical for the default
+        # paged layout; constant-footprint geometries pin their own)
+        self.page_size = self.geometry.page_size
         cdt = jnp.dtype(cfg.compute_dtype)
-        nl, nkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_
-        self.k_pool = jnp.zeros((nl, self.total_pages, page_size, nkv, hd),
-                                cdt)
-        self.v_pool = jnp.zeros_like(self.k_pool)
+        k_shape, v_shape = self.geometry.array_shapes(self.total_pages)
+        self.k_pool = jnp.zeros(k_shape, cdt)
+        self.v_pool = jnp.zeros(v_shape, cdt)
         self.free: list[list[int]] = [
             list(range(self.offsets[i], self.offsets[i + 1]))
             for i in range(len(self.domains))]
@@ -364,10 +373,9 @@ class BwapPagePool:
             new_ids.extend(range(int(new_offsets[d]),
                                  int(new_offsets[d]) + len(pages)))
         total = int(new_offsets[-1])
-        nl, ps = self.cfg.num_layers, self.page_size
-        nkv, hd = self.cfg.num_kv_heads, self.cfg.head_dim_
-        new_k = jnp.zeros((nl, total, ps, nkv, hd), self.k_pool.dtype)
-        new_v = jnp.zeros_like(new_k)
+        k_shape, v_shape = self.geometry.array_shapes(total)
+        new_k = jnp.zeros(k_shape, self.k_pool.dtype)
+        new_v = jnp.zeros(v_shape, self.v_pool.dtype)
         (self.k_pool, self.v_pool), _ = self.executor.copy(
             (self.k_pool, self.v_pool), (new_k, new_v), old_ids, new_ids)
         id_map = np.full(self.total_pages, -1, dtype=np.int64)
@@ -415,10 +423,10 @@ class BwapPagePool:
 
     @property
     def page_bytes(self) -> int:
-        """Bytes of one page across all layers, K+V."""
-        nkv, hd = self.cfg.num_kv_heads, self.cfg.head_dim_
-        return (2 * self.page_size * nkv * hd * self.k_pool.dtype.itemsize
-                * self.cfg.num_layers)
+        """Bytes of one page across all layers, K+V — from the geometry,
+        never from ``2 * page_size * nkv * hd`` (wrong for MLA latent
+        caches with asymmetric k/v widths, and for SSM state pages)."""
+        return self.geometry.page_bytes
 
     def expected_read_time(self, page_ids: Sequence[int]) -> float:
         """Analytic per-token KV read time for a sequence (the max-parallel-

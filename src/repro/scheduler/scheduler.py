@@ -243,8 +243,8 @@ class RequestScheduler:
         # (speculative lookahead pages count: a verify step may transiently
         # hold spec_tokens positions past the final committed one)
         ps = self.view.page_size
-        footprint = -(-(r.prefill_target + r.max_new + self.spec_tokens)
-                      // ps)
+        footprint = self.view.geometry.pages_for_tokens(
+            r.prefill_target + r.max_new + self.spec_tokens)
         if footprint > self.allocatable_pages():
             # shared trie pages cannot rescue a single request's residency
             # bound — they still occupy pages it must hold — but the
@@ -326,7 +326,8 @@ class RequestScheduler:
         makes the bound *physical* — plus a CoW clone when the first
         decode write lands in a currently-shared page."""
         ps = self.view.page_size
-        total = -(-(r.prefill_target + r.max_new + self.spec_tokens) // ps)
+        total = self.view.geometry.pages_for_tokens(
+            r.prefill_target + r.max_new + self.spec_tokens)
         cow = 1 if (r.pages and r.prefill_target // ps < len(r.pages)
                     and self.view.shared(r.pages[r.prefill_target // ps])) \
             else 0
@@ -337,6 +338,17 @@ class RequestScheduler:
         return sum(self._future_pages(r)
                    for r in self.running + self.prefilling)
 
+    def demand_pages(self) -> int:
+        """Pages the current workload still wants beyond what the view
+        can allocate right now — the capacity market's demand signal
+        (``placement.zoo``): pending requests' lifetime footprints plus
+        the running batch's next-step growth, minus free capacity.
+        0 means satisfied; positive means this tenant is starved and
+        values annexed funding at its Eq.-1 stall exposure."""
+        need = sum(self._future_pages(r) for r in self.pending) \
+            + self._growth_need(self.running)
+        return max(0, need - self.view.free_count())
+
     def _seq_growth(self, length: int, pages) -> int:
         """Pages one sequence's next decode step may allocate: enough fresh
         pages to cover the write span ``[length, length + spec_tokens]``
@@ -344,7 +356,8 @@ class RequestScheduler:
         the first write position falls inside a *shared* page (the
         full-prompt-match fork)."""
         ps = self.view.page_size
-        need = max(0, -(-(length + self.spec_tokens + 1) // ps) - len(pages))
+        need = max(0, self.view.geometry.pages_for_tokens(
+            length + self.spec_tokens + 1) - len(pages))
         if length % ps and pages \
                 and self.view.shared(pages[length // ps]):
             need += 1
@@ -360,11 +373,13 @@ class RequestScheduler:
     def victim_score(self, r: Request) -> float:
         """priority-factor x footprint x Eq.-1 stall cost (DESIGN.md §5):
         ``2^-level`` halves a victim's attractiveness per priority level;
-        footprint is what the eviction frees (exclusive pages only — shared
-        prefix pages stay put); the stall term prefers sequences whose
-        pages already gate the batch's read time."""
+        footprint is the *bytes* the eviction frees (exclusive pages only —
+        shared prefix pages stay put; byte-denominated so scores compare
+        across page geometries, DESIGN.md §12); the stall term prefers
+        sequences whose pages already gate the batch's read time."""
         stall = self.view.stall_cost(r.pages)
-        return (2.0 ** -self.level(r)) * self._exclusive(r) * (stall + 1e-12)
+        freed_bytes = self._exclusive(r) * float(self.view.page_bytes)
+        return (2.0 ** -self.level(r)) * freed_bytes * (stall + 1e-12)
 
     def _swap_out(self, r: Request) -> None:
         pages = self._exclusive(r)

@@ -409,7 +409,10 @@ class KVSwapManager:
     def _transfer_seconds(self, src_doms, dst_doms) -> float:
         """Eq.-1 cost of the copy under the fabric's effective bandwidths:
         reads and writes overlap across domains, so the transfer takes the
-        slower of the two sides."""
+        slower of the two sides. Sized per geometry — ``view.page_bytes``
+        comes from the group's :class:`PageGeometry` (DESIGN.md §12), so
+        swapping an MLA latent page bills its true (much smaller) byte
+        cost, not the dense-transformer constant."""
         nd = len(self.view.domains)
         pb = self.view.page_bytes
         read = np.bincount(src_doms, minlength=nd) * pb

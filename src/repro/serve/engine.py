@@ -476,11 +476,14 @@ class ServeEngine:
         # Growth always runs over the FULL batch in global order — even in
         # micro-batch mode — so page ids (and therefore everything
         # downstream) are bit-identical to a single global launch.
-        for s in batch:
-            if s.length % ps == 0:
-                self.view.append_page(s.pages)
-            else:
-                self.view.fork_for_write(s.pages, s.length // ps)
+        # Constant-footprint geometries (SSM state, DESIGN.md §12) never
+        # append: their one state page absorbs every step in place.
+        if self.view.geometry.grows:
+            for s in batch:
+                if s.length % ps == 0:
+                    self.view.append_page(s.pages)
+                else:
+                    self.view.fork_for_write(s.pages, s.length // ps)
         if groups is not None:
             # compute-follows-data (DESIGN.md §11): one launch per domain
             # group. Each row's attention reads only its own page table and

@@ -1,8 +1,17 @@
-"""Compatibility shim: the physical page pool moved into the placement
-package (``repro.placement.pool``) when the memory-fabric API landed
-(DESIGN.md §8). Import sites in serve/scheduler go through
+"""Deprecated compatibility shim: the physical page pool moved into the
+placement package (``repro.placement.pool``) when the memory-fabric API
+landed (DESIGN.md §8). Import sites in serve/scheduler go through
 :class:`repro.placement.fabric.FabricView` now; this module only keeps the
-old import path alive for external callers, tests, and benchmarks."""
+old import path alive for external callers, tests, and benchmarks — and
+warns once per process so they migrate."""
+
+import warnings
 
 from repro.placement.pool import (BwapPagePool, MemoryDomain,  # noqa: F401
                                   default_domains)
+
+warnings.warn(
+    "repro.serve.kvcache is deprecated: import BwapPagePool/MemoryDomain/"
+    "default_domains from repro.placement.pool (serving code should go "
+    "through repro.placement.fabric.FabricView, DESIGN.md §8)",
+    DeprecationWarning, stacklevel=2)

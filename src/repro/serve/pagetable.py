@@ -1,7 +1,16 @@
-"""Compatibility shim: the logical page table moved into the placement
-package (``repro.placement.pagetable``) when the memory-fabric API landed
-(DESIGN.md §8). Import sites in serve/scheduler go through
+"""Deprecated compatibility shim: the logical page table moved into the
+placement package (``repro.placement.pagetable``) when the memory-fabric
+API landed (DESIGN.md §8). Import sites in serve/scheduler go through
 :class:`repro.placement.fabric.FabricView` now; this module only keeps the
-old import path alive for external callers, tests, and benchmarks."""
+old import path alive for external callers, tests, and benchmarks — and
+warns once per process so they migrate."""
+
+import warnings
 
 from repro.placement.pagetable import ROOT, PageTable  # noqa: F401
+
+warnings.warn(
+    "repro.serve.pagetable is deprecated: import ROOT/PageTable from "
+    "repro.placement.pagetable (serving code should go through "
+    "repro.placement.fabric.FabricView, DESIGN.md §8)",
+    DeprecationWarning, stacklevel=2)

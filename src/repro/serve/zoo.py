@@ -1,0 +1,188 @@
+"""Zoo serving: per-group drivers over one byte arena (DESIGN.md §12).
+
+The chat transformer runs the full :class:`~repro.serve.engine.ServeEngine`
+(continuous batching, chunked prefill, PR 8's per-domain micro-batch decode
+launches all ride along unchanged — the engine only ever sees its own
+group's FabricView).  The other residents of the machine are not
+transformers and need no scheduler: an SSM tenant's "sequence" is one
+constant-size state page mutated in place every step, an ASR tenant's
+encoder K/V is written once per utterance and then only read.  Each gets
+a small deterministic driver that exercises exactly the placement surface
+its geometry defines — allocate, touch, fork-by-copy, attach-by-refcount,
+release — and produces a content digest read back from the actual pool
+arrays, so the zoo benchmark can assert data integrity ("token identity"
+for groups that emit no tokens) across market-driven funding moves.
+
+:class:`ZooServer` steps everything and runs the capacity market: after
+each round it reports every engine group's unfunded demand
+(``scheduler.demand_pages()`` in bytes) to the
+:class:`~repro.placement.zoo.PageFabricZoo` and ticks the market, so a
+chat burst annexes idle ASR/SSM funding mid-run and repays it as it
+drains — with ``market=False`` the same server is the static-partition
+baseline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.placement.zoo import PageFabricZoo
+
+
+class SSMStateDriver:
+    """Constant-state tenant: ``sessions`` live recurrences, one state
+    page each (the geometry pins ``fixed_pages=1``).  Every step folds a
+    deterministic per-session injection into the state *in place* —
+    never appending — so the page list never changes while the bytes do.
+    The update depends only on (session index, step count), never on
+    page ids or domains: digests are invariant under placement and
+    funding changes, which is exactly what the zoo benchmark asserts."""
+
+    def __init__(self, view, sessions: int):
+        self.view = view
+        self.sessions: list[list[int]] = []
+        self.steps = 0
+        for _ in range(sessions):
+            pages: list[int] = []
+            for _ in range(view.geometry.fixed_pages):
+                view.append_page(pages)
+            self.sessions.append(pages)
+
+    def step(self) -> None:
+        """One recurrence step over every session's state page."""
+        self.steps += 1
+        pids = np.asarray([p[0] for p in self.sessions], dtype=np.int32)
+        inject = np.asarray(
+            [((i + 1) * self.steps) % 7 * 0.125
+             for i in range(len(self.sessions))], dtype=np.float32)
+        k = self.view.k_pool
+        bshape = (1, len(pids)) + (1,) * (k.ndim - 2)
+        self.view.k_pool = k.at[:, pids].set(
+            k[:, pids] * 0.5 + inject.reshape(bshape).astype(k.dtype))
+
+    def fork(self, idx: int) -> list[int]:
+        """Clone one session (state copy, not CoW — geometry is
+        non-shareable) and track it as a new live session."""
+        clone = self.view.fork_sequence(self.sessions[idx])
+        self.sessions.append(clone)
+        return clone
+
+    def digests(self) -> list[float]:
+        """Per-session state checksums read back from the pool arrays."""
+        k = np.asarray(self.view.k_pool, dtype=np.float64)
+        return [round(float(k[:, p[0]].sum()), 6) for p in self.sessions]
+
+    def close(self) -> None:
+        for pages in self.sessions:
+            self.view.release(pages)
+        self.sessions.clear()
+
+
+class EncoderKVDriver:
+    """Read-only encoder cross-attention K/V tier: each utterance is a
+    fixed ``geometry.fixed_pages`` block written once (deterministic
+    content from the utterance index), after which decode sessions
+    attach by refcount (``fork_sequence`` on a shareable geometry) and
+    detach by release — the shareable-tier analog of the prefix trie."""
+
+    def __init__(self, view, utterances: int):
+        self.view = view
+        self.utterances: list[list[int]] = []
+        self.readers: list[list[int]] = []
+        for u in range(utterances):
+            pages: list[int] = []
+            for _ in range(view.geometry.fixed_pages):
+                view.append_page(pages)
+            pids = np.asarray(pages, dtype=np.int32)
+            k = self.view.k_pool
+            fill = np.float32((u + 1) * 0.0625)
+            self.view.k_pool = k.at[:, pids].set(fill.astype(k.dtype))
+            self.utterances.append(pages)
+
+    def attach(self, u: int) -> list[int]:
+        """A decode session starts reading utterance ``u``: refcount
+        attach, no copy, no new pages."""
+        reader = self.view.fork_sequence(self.utterances[u])
+        self.readers.append(reader)
+        return reader
+
+    def digests(self) -> list[float]:
+        k = np.asarray(self.view.k_pool, dtype=np.float64)
+        return [round(float(sum(k[:, p].sum() for p in pages)), 6)
+                for pages in self.utterances]
+
+    def close(self) -> None:
+        for reader in self.readers:
+            self.view.release(reader)
+        for pages in self.utterances:
+            self.view.release(pages)
+        self.readers.clear()
+        self.utterances.clear()
+
+
+class ZooServer:
+    """Steps every group and runs the capacity market between them."""
+
+    def __init__(self, zoo: PageFabricZoo, *, market: bool = True,
+                 invariants_every: int = 8):
+        self.zoo = zoo
+        self.market = market
+        self.engines: dict[str, object] = {}
+        self.drivers: dict[str, object] = {}
+        self.steps = 0
+        self.invariants_every = invariants_every
+
+    def add_engine(self, name: str, engine) -> None:
+        assert name in self.zoo.groups, f"unknown zoo group {name!r}"
+        self.engines[name] = engine
+
+    def add_driver(self, name: str, driver) -> None:
+        assert name in self.zoo.groups, f"unknown zoo group {name!r}"
+        self.drivers[name] = driver
+
+    def busy(self) -> bool:
+        return any(eng.active or eng.waiting
+                   for eng in self.engines.values())
+
+    def demand_bytes(self, name: str) -> int:
+        """An engine group's unfunded demand; driver groups (constant
+        footprint, already resident) are always satisfied."""
+        eng = self.engines.get(name)
+        if eng is None:
+            return 0
+        return eng.scheduler.demand_pages() \
+            * int(self.zoo.groups[name].page_bytes)
+
+    def step(self) -> dict:
+        """One zoo round: drivers tick, engines step, the market clears."""
+        self.steps += 1
+        for driver in self.drivers.values():
+            if hasattr(driver, "step"):
+                driver.step()
+        for eng in self.engines.values():
+            if eng.active or eng.waiting:
+                eng.step()
+        flows = {"granted_bytes": 0, "repaid_bytes": 0}
+        if self.market:
+            for name in self.zoo.groups:
+                self.zoo.observe_demand(name, self.demand_bytes(name))
+            flows = self.zoo.market_tick()
+        if self.invariants_every \
+                and self.steps % self.invariants_every == 0:
+            self.zoo.check_invariants()
+        return flows
+
+    def drain(self, max_steps: int = 3000) -> int:
+        """Step until every engine is idle (drivers are perpetual — they
+        tick alongside but never gate completion)."""
+        steps = 0
+        while self.busy() and steps < max_steps:
+            self.step()
+            steps += 1
+        if self.market:
+            # burst over: let the market settle repayments
+            for name in self.zoo.groups:
+                self.zoo.observe_demand(name, self.demand_bytes(name))
+            self.zoo.market_tick()
+        self.zoo.check_invariants()
+        return steps
