@@ -48,6 +48,9 @@ SCHEMAS: dict[str, tuple[str, ...]] = {
     # scheduler_bench.zoo_compare: capacity market across page geometries
     "BENCH_zoo.json": ("market", "static", "goodput_ratio",
                        "token_identical"),
+    # scheduler_bench.disagg_compare: prefill/decode split over the wire
+    "BENCH_disagg.json": ("single", "disagg", "ttft_goodput_ratio",
+                          "token_identical"),
 }
 
 EXPECTED = tuple(SCHEMAS)

@@ -753,6 +753,129 @@ def zoo_compare(seed: int = 0, check: bool = True) -> dict:
     return rows
 
 
+def disagg_compare(seed: int = 0, check: bool = True) -> dict:
+    """Prefill/decode disaggregation over the BWAP-priced page wire vs
+    single-host serving (ISSUE 10, CI-gated; DESIGN.md §13).
+
+    A prefill-heavy burst: every prompt is long (its prefill dominates),
+    every completion short. On the single host, arriving prompts chunk
+    their prefill through the same steps that decode earlier requests, so
+    each admission pays queued decode time before its first token. The
+    cluster admits prompts to a dedicated prefill host (``max_new=1`` —
+    near-pure prefill steps, which cost zero virtual time) and hands the
+    finished prompt range to the decode host over the interconnect; the
+    decode host's trie adopts the imported chains and only the tail page
+    re-prefills. The hosts deliberately run *different* page sizes
+    (prefill 4, decode/single 8) so every handoff exercises
+    convert-on-import.
+
+    Gates: token-identical to the single host, >= 1.15x TTFT-weighted
+    goodput (goodput / mean TTFT — the metric disaggregation exists to
+    move), every handoff converted, both fabrics' ledgers balanced.
+    Virtual-clock deterministic. Writes BENCH_disagg.json."""
+    from repro.cluster import ClusterRouter, Interconnect, Link, PageChannel
+    from repro.placement.fabric import as_view
+    from repro.placement.persist import PersistentTier
+
+    cfg = dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                              num_layers=1, compute_dtype="float32")
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, int(n)).tolist()
+               for n in rng.integers(40, 56, 10)]
+    max_new = 6
+
+    def host(page_size):
+        pool = BwapPagePool(cfg, [
+            MemoryDomain("hbm_local", 96, 819.0, True),
+            MemoryDomain("host_dram", 96, 0.016, False),
+        ], page_size=page_size, dwp_config=DWPConfig(n=10 ** 6, c=1))
+        view = as_view(pool)
+        view.fabric.attach_persist(
+            PersistentTier(bw_gbps=8.0, capacity_pages=256))
+        sched = RequestScheduler(pool, max_batch=10,
+                                 prefill_token_budget=32,
+                                 default_max_new=max_new)
+        eng = ServeEngine(cfg, params, pool, scheduler=sched,
+                          wall_clock=False, sim_step_s=0.005)
+        return view, eng
+
+    # single host: prefills and decodes share every step
+    view_s, eng_s = host(8)
+    for p in prompts:
+        eng_s.submit(list(p), max_new=max_new)
+    steps = 0
+    while (eng_s.active or eng_s.waiting) and steps < 3000:
+        eng_s.step()
+        steps += 1
+    slo = eng_s.scheduler.slo.summary(eng_s.scheduler.now)
+    single = {
+        "finished": len(eng_s.finished),
+        "steps": steps,
+        "makespan_s": eng_s.scheduler.now,
+        "ttft_mean_s": slo["ttft_mean_s"],
+        "goodput_tok_s": slo["goodput_tok_s"],
+        "ttft_weighted_goodput": slo["ttft_weighted_goodput"],
+    }
+    single_toks = [list(s.tokens) for s in
+                   sorted(eng_s.finished, key=lambda s: s.sid)]
+
+    # cluster: prefill host (ps 4) -> Eq.-5-striped wire -> decode host
+    view_p, eng_p = host(4)
+    view_d, eng_d = host(8)
+    wire = Interconnect([Link("nvl", 0.2, latency_s=1e-4),
+                         Link("rdma", 0.05, latency_s=5e-4)])
+    channel = PageChannel(wire, chunk_bytes=1 << 14)
+    router = ClusterRouter(eng_p, eng_d, channel,
+                           saturation_horizon_s=0.25)
+    rids = [router.submit(list(p), max_new=max_new) for p in prompts]
+    router.drain()
+    disagg_toks = [router.result(r) for r in rids]
+    summ = router.summary()
+    identical = disagg_toks == single_toks
+    view_p.fabric.check_invariants()
+    view_d.fabric.check_invariants()
+    disagg = {
+        "finished": summ["completed"],
+        "handoffs": summ["handoffs"],
+        "fallbacks": summ["fallbacks"],
+        "converted_imports": channel.converted_imports,
+        "wire_bytes": wire.sent_bytes,
+        "wire_busy_s": wire.busy_seconds,
+        "makespan_s": summ["elapsed_s"],
+        "ttft_mean_s": summ["ttft_mean_s"],
+        "goodput_tok_s": summ["goodput_tok_s"],
+        "ttft_weighted_goodput": summ["ttft_weighted_goodput"],
+    }
+    ratio = disagg["ttft_weighted_goodput"] \
+        / max(single["ttft_weighted_goodput"], 1e-9)
+    for name, r in (("single", single), ("disagg", disagg)):
+        print(f"  {name:7s} ttft_mean {r['ttft_mean_s'] * 1e3:6.1f} ms  "
+              f"goodput {r['goodput_tok_s']:7.1f} tok/s  "
+              f"ttft-weighted {r['ttft_weighted_goodput']:9.0f}  "
+              f"makespan {r['makespan_s']:.3f}s")
+    print(f"-> disaggregated vs single host: {ratio:.2f}x TTFT-weighted "
+          f"goodput ({disagg['handoffs']} handoffs, "
+          f"{disagg['converted_imports']} converted imports, "
+          f"{disagg['wire_bytes'] / 1024:.0f} KiB on the wire; "
+          f"token-identical: {identical})")
+    if check:
+        assert identical, "disaggregation changed generated tokens"
+        assert single["finished"] == disagg["finished"] == len(prompts)
+        assert disagg["handoffs"] == len(prompts) \
+            and disagg["fallbacks"] == 0, "the wire saturated mid-benchmark"
+        assert disagg["converted_imports"] == disagg["handoffs"], \
+            "mismatched page sizes must convert on every import"
+        assert ratio >= 1.15, (
+            f"disaggregation must lift TTFT-weighted goodput >= 1.15x "
+            f"single-host (got {ratio:.2f}x)")
+    rows = {"single": single, "disagg": disagg,
+            "ttft_goodput_ratio": ratio,
+            "token_identical": identical}
+    artifacts.dump("BENCH_disagg.json", rows)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -763,7 +886,14 @@ def main() -> None:
     ap.add_argument("--skip-persist", action="store_true")
     ap.add_argument("--skip-coda", action="store_true")
     ap.add_argument("--skip-zoo", action="store_true")
+    ap.add_argument("--skip-disagg", action="store_true")
+    ap.add_argument("--only-disagg", action="store_true")
     args = ap.parse_args()
+    if args.only_disagg:
+        print("disaggregated serving — prefill/decode split over the "
+              "page wire vs single host")
+        disagg_compare(seed=args.seed)
+        return
     compare(args.requests, args.new, args.seed)
     if not args.skip_prefix:
         print("\nprefix sharing — peak KV footprint, reuse on vs off")
@@ -782,6 +912,10 @@ def main() -> None:
     if not args.skip_zoo:
         print("\npage-geometry zoo — capacity market vs static partitions")
         zoo_compare(seed=args.seed)
+    if not args.skip_disagg:
+        print("\ndisaggregated serving — prefill/decode split over the "
+              "page wire vs single host")
+        disagg_compare(seed=args.seed)
 
 
 if __name__ == "__main__":

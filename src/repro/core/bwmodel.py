@@ -150,7 +150,10 @@ def stall_cost(bytes_per_domain: np.ndarray,
                bandwidths_gbps: np.ndarray,
                *,
                tier_bytes: float = 0.0,
-               tier_bw_gbps: float | None = None) -> float:
+               tier_bw_gbps: float | None = None,
+               link_bytes: np.ndarray | None = None,
+               link_bw_gbps: np.ndarray | None = None,
+               link_latency_s: np.ndarray | None = None) -> float:
     """Eq. 1's max-parallel-transfer time for one access batch.
 
     ``bytes_per_domain[d]`` bytes stream from domain ``d`` at
@@ -164,17 +167,36 @@ def stall_cost(bytes_per_domain: np.ndarray,
     tier below the memory domains, so demotion/promotion/restore transfers
     are priced by the same max — the tier is just one more (slow) domain in
     Eq. 1, not a special case.
+
+    ``link_bytes``/``link_bw_gbps``/``link_latency_s`` append one row per
+    *cluster interconnect link* (prefill/decode disaggregation,
+    DESIGN.md §13): a striped KV handoff streams ``link_bytes[l]`` over
+    link ``l`` concurrently with the domain rows, each paying a fixed
+    propagation latency on top of its serialization time — so a page wire
+    is priced like any other asymmetric domain read, latency included.
     """
     b = np.asarray(bytes_per_domain, dtype=np.float64)
     bw = np.asarray(bandwidths_gbps, dtype=np.float64)
     assert b.shape == bw.shape and (bw > 0).all()
+    lat = np.zeros_like(b)
     if tier_bytes > 0:
         assert tier_bw_gbps is not None and tier_bw_gbps > 0
         b = np.append(b, float(tier_bytes))
         bw = np.append(bw, float(tier_bw_gbps))
+        lat = np.append(lat, 0.0)
+    if link_bytes is not None:
+        lb = np.asarray(link_bytes, dtype=np.float64)
+        lbw = np.asarray(link_bw_gbps, dtype=np.float64)
+        llat = (np.zeros_like(lb) if link_latency_s is None
+                else np.asarray(link_latency_s, dtype=np.float64))
+        assert lb.shape == lbw.shape == llat.shape and (lbw > 0).all()
+        # latency applies only to rows that actually move bytes
+        b = np.append(b, lb)
+        bw = np.append(bw, lbw)
+        lat = np.append(lat, np.where(lb > 0, llat, 0.0))
     if b.sum() <= 0:
         return 0.0
-    return float((b / (bw * 1e9)).max())
+    return float((b / (bw * 1e9) + lat).max())
 
 
 def move_cost(bytes_per_src_domain: np.ndarray,

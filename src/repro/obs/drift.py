@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.placement.telemetry import Ring
 
-KINDS = ("batch_read", "swap_transfer", "tier_copy")
+KINDS = ("batch_read", "swap_transfer", "tier_copy", "link_transfer")
 
 
 class DriftLedger:

@@ -90,6 +90,19 @@ class Observatory:
             "repro_rehomed_pages_total",
             "Hot shared pages re-homed into fast domains, by view.",
             ("view",))
+        self._export_skips = m.counter(
+            "repro_tier_export_skips_total",
+            "Prefix-store chains dropped over the tier's byte cap, by "
+            "view (evictions land in repro_obs_tier_pages_total).",
+            ("view",))
+        self._link_bytes = m.counter(
+            "repro_link_bytes_total",
+            "Cluster interconnect traffic by view and direction.",
+            ("view", "direction"))
+        self._link_chunks = m.counter(
+            "repro_link_chunks_total",
+            "Chunked wire sends on the cluster interconnect, by view.",
+            ("view",))
         self._heat_gauge = m.gauge(
             "repro_page_heat",
             "Resolved per-page heat stats by domain "
@@ -133,7 +146,7 @@ class Observatory:
             elif event == "latency":
                 self._latency_hist.labels(
                     self._vlabel(view)).observe(kw["seconds"])
-            elif event in ("demote", "promote", "restore"):
+            elif event in ("demote", "promote", "restore", "evict"):
                 self._tier_ops.labels(event, self._vlabel(view)).inc(
                     kw["pages"])
                 if self.tracer is not None:
@@ -141,6 +154,27 @@ class Observatory:
                         event, view, self._now(view),
                         dur_s=kw.get("seconds", 0.0),
                         args={"pages": kw["pages"]})
+            elif event == "export_skip":
+                self._export_skips.labels(self._vlabel(view)).inc(
+                    kw["chains"])
+                if self.tracer is not None:
+                    self.tracer.on_fabric(
+                        event, view, self._now(view),
+                        args={"pages": kw["pages"],
+                              "chains": kw["chains"]})
+            elif event in ("link_send", "link_recv"):
+                direction = "send" if event == "link_send" else "recv"
+                self._link_bytes.labels(self._vlabel(view),
+                                        direction).inc(kw["bytes"])
+                if event == "link_send":
+                    self._link_chunks.labels(self._vlabel(view)).inc(
+                        kw["chunks"])
+                if self.tracer is not None:
+                    self.tracer.on_fabric(
+                        event, view, self._now(view),
+                        dur_s=kw.get("seconds", 0.0),
+                        args={k: kw[k] for k in ("pages", "bytes",
+                                                 "chunks") if k in kw})
         return handle
 
     # -- scheduler lifecycle hooks -------------------------------------------

@@ -48,7 +48,8 @@ from repro.placement.pool import BwapPagePool, MemoryDomain
 from repro.placement.telemetry import DomainTelemetry
 
 EVENTS = ("alloc", "free", "migrate", "share", "latency",
-          "demote", "promote", "restore")
+          "demote", "promote", "restore",
+          "evict", "export_skip", "link_send", "link_recv")
 
 # The event payload contract: every ``emit(event, ...)`` call site carries
 # AT LEAST these keyword fields (tests/test_obs.py asserts it statically
@@ -63,6 +64,10 @@ EVENT_FIELDS: dict[str, tuple[str, ...]] = {
     "demote": ("view", "pages", "handles", "seconds"),
     "promote": ("view", "pages", "seconds"),
     "restore": ("view", "pages", "seconds"),
+    "evict": ("view", "pages", "chains"),        # LRU prefix-store eviction
+    "export_skip": ("view", "pages", "chains"),  # over-cap chains dropped
+    "link_send": ("view", "bytes", "chunks", "seconds"),
+    "link_recv": ("view", "pages", "bytes", "seconds"),
 }
 SHARE_KIND_FIELDS: dict[str, tuple[str, ...]] = {
     "prefix": ("page", "owner", "view"),     # view = the borrowing reader
@@ -170,7 +175,7 @@ class MemoryFabric:
         assert self.persist is None, "fabric already owns a persistent tier"
         self.persist = tier
         tier.bind(self)
-        for ev in ("demote", "promote", "restore"):
+        for ev in ("demote", "promote", "restore", "evict"):
             self.subscribe(ev, self._tier_recorder(ev))
         self.refresh_tier_gauges()
 
@@ -199,9 +204,10 @@ class MemoryFabric:
 
     def subscribe(self, event: str, fn: Callable) -> None:
         """Register ``fn`` on one of the fabric events (``alloc``, ``free``,
-        ``migrate``, ``share``, ``latency``, ``demote``, ``promote``,
-        ``restore``). Callbacks receive keyword arguments only; unknown
-        keys must be tolerated (``**_``)."""
+        ``migrate``, ``share``, ``latency``, the tier's ``demote``/
+        ``promote``/``restore``/``evict``/``export_skip``, or the cluster
+        wire's ``link_send``/``link_recv``). Callbacks receive keyword
+        arguments only; unknown keys must be tolerated (``**_``)."""
         assert event in EVENTS, f"unknown fabric event {event!r}"
         self._subs[event].append(fn)
 

@@ -120,8 +120,13 @@ class PersistentTier:
         self.fabric = None
         self._entries: dict[int, _Persisted] = {}
         self._next = FIRST_HANDLE
-        # prefix-store pin registry: (view, tokens) -> {"view","tokens","pages"}
+        # prefix-store pin registry:
+        # (view, tokens) -> {"view","tokens","pages","stamp"}; ``stamp`` is
+        # a monotonic use-clock driving LRU eviction at the store's byte cap
         self._pins: dict[tuple, dict] = {}
+        self._pin_clock = 0
+        self.evicted_chains = 0          # LRU evictions at the byte cap
+        self.skipped_chains = 0          # unpinned chains dropped over-cap
         self._mem_store: dict | None = None      # in-memory prefix store
 
     def bind(self, fabric) -> None:
@@ -162,17 +167,26 @@ class PersistentTier:
             "used_pages": self.used_pages(),
             "capacity_pages": self.capacity_pages,
             "pins": len(self._pins),
+            "evicted_chains": self.evicted_chains,
+            "skipped_chains": self.skipped_chains,
             "per_view": self.per_view_counts(),
         }
 
     def _geometry(self, pool) -> dict:
         cfg = pool.cfg
+        g = pool.geometry
         return {
-            "num_layers": int(cfg.num_layers),
+            "num_layers": int(g.num_layers),
             "page_size": int(pool.page_size),
             "num_kv_heads": int(cfg.num_kv_heads),
             "head_dim": int(cfg.head_dim_),
             "dtype": str(np.asarray(pool.k_pool).dtype),
+            # geometry-polymorphic facts (DESIGN.md §12): the conversion
+            # layer (cluster/convert.py) re-chunks across page_size when
+            # kind and block tails agree, and refuses otherwise
+            "kind": g.kind,
+            "k_block": [int(x) for x in g.k_block],
+            "v_block": [int(x) for x in g.v_block],
         }
 
     def _staging_plan(self, pool, nbytes: list[int]) -> dict:
@@ -289,10 +303,21 @@ class PersistentTier:
         key = (view.name, tuple(tokens[:n]))
         if key in self._pins:
             view.release(pages)            # already pinned: undo dup holds
+            self.touch_pin(key)
             return key
+        self._pin_clock += 1
         self._pins[key] = {"view": view.name, "tokens": list(tokens[:n]),
-                           "pages": pages}
+                           "pages": pages, "stamp": self._pin_clock}
         return key
+
+    def touch_pin(self, key) -> None:
+        """Refresh a pin's LRU stamp: the arbiter touches the pins it
+        re-selects each cycle, so a preamble that stays globally hot never
+        ages into an eviction candidate."""
+        entry = self._pins.get(key)
+        if entry is not None:
+            self._pin_clock += 1
+            entry["stamp"] = self._pin_clock
 
     def unpin(self, key) -> None:
         entry = self._pins.pop(key, None)
@@ -313,17 +338,80 @@ class PersistentTier:
             out.update(entry["pages"])
         return out
 
+    def _pin_stamp(self, view, tokens: Sequence[int]) -> int | None:
+        """LRU stamp of the pin covering a chain, if any: a chain is
+        "pinned" when some pin's token path is a prefix of it (chains are
+        maximal, so they may extend past the pinned preamble)."""
+        toks = tuple(int(t) for t in tokens)
+        best = None
+        for (vname, ptoks), entry in self._pins.items():
+            if vname == view.name and toks[:len(ptoks)] == ptoks:
+                best = max(best or 0, entry["stamp"])
+        return best
+
+    def _evict_chain_pins(self, view, tokens: Sequence[int]) -> None:
+        """Drop every pin whose token path prefixes the evicted chain."""
+        toks = tuple(int(t) for t in tokens)
+        for key in [k for k in self._pins
+                    if k[0] == view.name and toks[:len(k[1])] == k[1]]:
+            self.unpin(key)
+
+    def store_budget_bytes(self, pool) -> int:
+        """The prefix store's byte cap: the tier's page capacity priced in
+        the pool's page bytes. Demotion slots and the store share the same
+        cap — the tier is one device, not two."""
+        return self.capacity_pages * pool.page_bytes
+
     def export_prefixes(self, view, *, min_ref: int = 2) -> dict:
         """Export hot prefix chains — every pinned chain plus every chain
         whose pages are all held by ``min_ref``+ readers — with their chain
         keys (root-anchored token paths) and K/V bytes. Returns the
-        manifest; the store (disk or memory) is replaced atomically."""
+        manifest; the store (disk or memory) is replaced atomically.
+
+        The store is capped at :meth:`store_budget_bytes`. Over the cap,
+        chains are kept by priority — pinned chains in LRU order (most
+        recently touched first), then unpinned chains — and the losers are
+        *surfaced*, not silently dropped: a rejected pinned chain is
+        unpinned and emits ``evict`` (the LRU eviction policy), a rejected
+        unpinned chain emits ``export_skip``; both are counted in the
+        observatory metrics."""
         pool = view.pool
         table = view.table
         pinned = self.pinned_pages()
         chains = table.export_chains(
             select=lambda pid: pid in pinned
             or table.ref.get(pid, 0) >= min_ref)
+        # rank: pinned chains newest-stamp-first, then unpinned in table
+        # order; greedy-fit against the byte cap in that priority order
+        ranked = sorted(
+            range(len(chains)),
+            key=lambda i: (
+                (0, -(self._pin_stamp(view, chains[i]["tokens"]) or 0))
+                if self._pin_stamp(view, chains[i]["tokens"]) is not None
+                else (1, i)))
+        budget = self.store_budget_bytes(pool)
+        pb = pool.page_bytes
+        spent, kept = 0, []
+        for i in ranked:
+            ch = chains[i]
+            nbytes = len(ch["phys"]) * pb
+            if spent + nbytes <= budget:
+                spent += nbytes
+                kept.append(i)
+                continue
+            stamp = self._pin_stamp(view, ch["tokens"])
+            if stamp is not None:
+                self._evict_chain_pins(view, ch["tokens"])
+                self.evicted_chains += 1
+                if self.fabric is not None:
+                    self.fabric.emit("evict", view=view.name,
+                                     pages=len(ch["phys"]), chains=1)
+            else:
+                self.skipped_chains += 1
+                if self.fabric is not None:
+                    self.fabric.emit("export_skip", view=view.name,
+                                     pages=len(ch["phys"]), chains=1)
+        chains = [chains[i] for i in sorted(kept)]
         manifest = {
             "kind": "prefix_store",
             "geometry": self._geometry(pool),
@@ -422,19 +510,28 @@ class PersistentTier:
             key = (view.name, tuple(tokens))
             if key in self._pins:
                 view.release(pages)        # chain already held by a pin
+                self.touch_pin(key)
             else:
+                self._pin_clock += 1
                 self._pins[key] = {"view": view.name, "tokens": list(tokens),
-                                   "pages": pages}
+                                   "pages": pages, "stamp": self._pin_clock}
             restored += len(fresh)
         return restored, seconds
 
     # -- peer page export / import --------------------------------------------
 
-    def export_range(self, view, pages: Sequence[int], mesh=None) -> dict:
+    def export_range(self, view, pages: Sequence[int], mesh=None, *,
+                     tokens: Sequence[int] | None = None,
+                     ntokens: int | None = None) -> dict:
         """Serialize a live page range: table slice (refcounts + trie
         chains restricted to the range), physical K/V bytes, the exporter's
         ledger charges, and the mesh/sharding layout stamp. Non-destructive:
-        the exporter keeps its pages — the peer adopts a copy."""
+        the exporter keeps its pages — the peer adopts a copy.
+
+        ``tokens``/``ntokens`` annotate the range with its token path and
+        valid-token count so a peer with a *different* page size can
+        re-chunk the bytes (cluster/convert.py) — without them a mismatched
+        import has no way to rebuild chain keys or trim write padding."""
         pool = view.pool
         pages = [int(p) for p in pages]
         assert all(p >= 0 for p in pages), \
@@ -447,6 +544,9 @@ class PersistentTier:
             "geometry": self._geometry(pool),
             "layout": kv_layout_metadata(pool.cfg, pool.page_size, mesh),
             "pages": pages,
+            "tokens": None if tokens is None else [int(t) for t in tokens],
+            "ntokens": int(ntokens if ntokens is not None
+                           else len(pages) * pool.page_size),
             "ref": {int(p): int(view.table.ref.get(p, 0)) for p in pages},
             "chains": view.table.export_chains(
                 select=lambda pid: pid in pageset),
@@ -495,17 +595,31 @@ class PersistentTier:
         return new_ids, seconds
 
 
+def _wire_dtype(name: str) -> np.dtype:
+    """Resolve a geometry dtype stamp, including the ml_dtypes families
+    (bfloat16 & co) that plain ``np.dtype`` does not know by name."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def serialize_range(blob: dict) -> bytes:
     """Wire format for a page-range export: length-prefixed JSON header
     followed by the two ``np.save`` payloads. Peers on other hosts adopt
-    ranges from exactly these bytes."""
+    ranges from exactly these bytes. Payloads travel as uint8 views —
+    ``np.save`` flattens extension dtypes like bfloat16 to opaque void
+    records — and the importer restores the geometry stamp's dtype."""
     head = {key: val for key, val in blob.items() if key not in ("k", "v")}
     raw = json.dumps(head).encode()
     buf = io.BytesIO()
     buf.write(len(raw).to_bytes(8, "little"))
     buf.write(raw)
-    np.save(buf, np.ascontiguousarray(blob["k"]), allow_pickle=False)
-    np.save(buf, np.ascontiguousarray(blob["v"]), allow_pickle=False)
+    np.save(buf, np.ascontiguousarray(blob["k"]).view(np.uint8),
+            allow_pickle=False)
+    np.save(buf, np.ascontiguousarray(blob["v"]).view(np.uint8),
+            allow_pickle=False)
     return buf.getvalue()
 
 
@@ -513,6 +627,7 @@ def deserialize_range(data: bytes) -> dict:
     buf = io.BytesIO(data)
     n = int.from_bytes(buf.read(8), "little")
     blob = json.loads(buf.read(n).decode())
-    blob["k"] = np.load(buf, allow_pickle=False)
-    blob["v"] = np.load(buf, allow_pickle=False)
+    dtype = _wire_dtype(blob["geometry"]["dtype"])
+    blob["k"] = np.load(buf, allow_pickle=False).view(dtype)
+    blob["v"] = np.load(buf, allow_pickle=False).view(dtype)
     return blob

@@ -123,7 +123,7 @@ class DomainTelemetry:
     Everything mirrors into ``self.metrics`` (labeled registry).
     """
 
-    TIER_OPS = ("demote", "promote", "restore")
+    TIER_OPS = ("demote", "promote", "restore", "evict")
 
     def __init__(self, domain_names: Sequence[str], ring_capacity: int = 128):
         self.domain_names = list(domain_names)
@@ -151,7 +151,8 @@ class DomainTelemetry:
         self.spec_emitted = 0        # tokens emitted by verify steps
         # persistent tier (DESIGN.md §9): demote = swap slot -> tier,
         # promote = tier -> fast domain (through the swap forwarding map),
-        # restore = prefix-store re-import into a fresh fabric
+        # restore = prefix-store re-import into a fresh fabric,
+        # evict = LRU drop of a pinned chain at the prefix store's cap
         self.tier_pages = {op: 0 for op in self.TIER_OPS}
         self.tier_seconds = {op: 0.0 for op in self.TIER_OPS}
         self.tier_occupancy: dict[str, dict[str, int]] = {}

@@ -148,4 +148,14 @@ class SloTracker:
         out["completed"] = total_completed
         out["good_tokens"] = total_good_tokens
         out["goodput_tok_s"] = total_good_tokens / max(now, 1e-9)
+        # TTFT-weighted goodput: good tokens per second, discounted by the
+        # aggregate mean TTFT — the figure of merit for prefill/decode
+        # disaggregation (scheduler_bench.disagg_compare), where the win is
+        # first tokens arriving sooner at equal token throughput
+        all_ttfts = [r.ttft for r in self.records.values()
+                     if r.ttft is not None]
+        ttft_mean = float(np.mean(all_ttfts)) if all_ttfts else 0.0
+        out["ttft_mean_s"] = ttft_mean
+        out["ttft_weighted_goodput"] = (
+            out["goodput_tok_s"] / max(ttft_mean, 1e-9))
         return out

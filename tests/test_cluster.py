@@ -1,0 +1,371 @@
+"""Disaggregated serving cluster (DESIGN.md §13): Eq.-1 link rows, the
+Eq.-5-striped interconnect and its virtual clock, the chunked page
+channel (wire round-trips, drift billing, convert-on-import), and the
+prefill/decode router's token identity + saturation fallback."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterRouter, Interconnect, Link, PageChannel,
+                           convert_range)
+from repro.configs import registry
+from repro.core import bwmodel
+from repro.core.dwp import DWPConfig
+from repro.obs.observatory import Observatory
+from repro.placement.fabric import as_view
+from repro.placement.persist import (PersistentTier, deserialize_range,
+                                     kv_layout_metadata, serialize_range)
+from repro.placement.pool import BwapPagePool, MemoryDomain
+from repro.scheduler import RequestScheduler
+from repro.serve.engine import ServeEngine
+
+CHAT = dataclasses.replace(registry.get_smoke_config("qwen2-0.5b"),
+                           num_layers=1, compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    import jax
+    from repro.models.lm import LM
+    return LM(CHAT).init(jax.random.PRNGKey(0))
+
+
+def _host(cfg=CHAT, *, page_size=4, pages=96, obs=False, **tier_kw):
+    pool = BwapPagePool(cfg, [
+        MemoryDomain("hbm_local", pages // 2, 819.0, True),
+        MemoryDomain("host_dram", pages - pages // 2, 0.016, False),
+    ], page_size=page_size, dwp_config=DWPConfig(n=10 ** 6, c=1))
+    view = as_view(pool)
+    tier_kw.setdefault("bw_gbps", 8.0)
+    tier_kw.setdefault("capacity_pages", 256)
+    tier = PersistentTier(**tier_kw)
+    view.fabric.attach_persist(tier)
+    ob = Observatory(pool) if obs else None
+    return pool, view, tier, ob
+
+
+def _fill(pool, pid, val):
+    pool.k_pool = pool.k_pool.at[:, pid].set(float(val))
+    pool.v_pool = pool.v_pool.at[:, pid].set(float(-val))
+
+
+def _chain(view, pool, tokens, val=5):
+    pages = []
+    for i in range(len(tokens) // pool.page_size):
+        view.append_page(pages)
+        _fill(pool, pages[-1], val + i)
+    view.register_prefix(list(tokens), pages, len(tokens))
+    return pages
+
+
+def _wire(*links, **kw):
+    links = links or (Link("nvl", 0.2, 1e-4), Link("rdma", 0.05, 5e-4))
+    return Interconnect(list(links), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 with link rows
+# ---------------------------------------------------------------------------
+
+def test_stall_cost_link_rows():
+    b, bw = np.array([8e9]), np.array([8.0])
+    # a slow link row dominates: 8e9 B / 0.8 GB/s + 0.5s latency
+    assert bwmodel.stall_cost(
+        b, bw, link_bytes=np.array([8e9]), link_bw_gbps=np.array([0.8]),
+        link_latency_s=np.array([0.5])) == pytest.approx(10.5)
+    # a fast link never dominates a slow domain row
+    assert bwmodel.stall_cost(
+        b, bw, link_bytes=np.array([8e9]), link_bw_gbps=np.array([800.0]),
+        link_latency_s=np.array([0.0])) == pytest.approx(1.0)
+    # zero-byte link rows contribute neither time nor latency
+    assert bwmodel.stall_cost(
+        b, bw, link_bytes=np.array([0.0]), link_bw_gbps=np.array([0.8]),
+        link_latency_s=np.array([9.9])) == pytest.approx(1.0)
+    # links compose with the tier row under the same max
+    assert bwmodel.stall_cost(
+        b, bw, tier_bytes=8e9, tier_bw_gbps=0.4,
+        link_bytes=np.array([8e9]), link_bw_gbps=np.array([0.8]),
+        link_latency_s=np.array([0.0])) == pytest.approx(20.0)
+    # an empty domain vector prices a pure wire transfer
+    assert bwmodel.stall_cost(
+        np.zeros(0), np.zeros(0), link_bytes=np.array([1e9]),
+        link_bw_gbps=np.array([1.0]),
+        link_latency_s=np.array([0.25])) == pytest.approx(1.25)
+
+
+# ---------------------------------------------------------------------------
+# interconnect: Eq.-5 striping, virtual clock, calibration
+# ---------------------------------------------------------------------------
+
+def test_interconnect_weights_follow_bandwidth():
+    ic = _wire(Link("a", 0.3), Link("b", 0.1))
+    w = ic.weights()
+    assert w == pytest.approx([0.75, 0.25])
+    per = ic.stripe(1000)
+    assert per.sum() == 1000
+    assert per[0] == pytest.approx(750, abs=1)
+
+
+def test_interconnect_price_is_slowest_stripe():
+    ic = _wire(Link("a", 0.3, 1e-3), Link("b", 0.1, 4e-3))
+    n = 300_000
+    per = ic.stripe(n)
+    want = max(per[0] / 0.3e9 + 1e-3, per[1] / 0.1e9 + 4e-3)
+    assert ic.transfer_seconds(n) == pytest.approx(want)
+    # proportional striping beats a uniform split on asymmetric links
+    uniform = bwmodel.stall_cost(
+        np.zeros(0), np.zeros(0), link_bytes=np.array([n / 2, n / 2]),
+        link_bw_gbps=np.array([0.3, 0.1]),
+        link_latency_s=np.array([1e-3, 4e-3]))
+    assert ic.transfer_seconds(n) < uniform
+
+
+def test_interconnect_virtual_clock_serializes_sends():
+    ic = _wire(Link("a", 0.1))
+    s0, d0 = ic.send(100_000, now=0.0)
+    s1, d1 = ic.send(100_000, now=0.0)
+    assert s0 == 0.0 and s1 == pytest.approx(d0)
+    assert ic.busy_until == pytest.approx(d0 + d1)
+    assert ic.queue_delay(0.0) == pytest.approx(d0 + d1)
+    assert ic.saturated(0.0, horizon_s=d0) \
+        and not ic.saturated(d0 + d1, horizon_s=0.0)
+
+
+def test_interconnect_calibration_moves_effective_bw():
+    ic = _wire(Link("a", 0.1))
+    predicted = ic.transfer_seconds(1_000_000)
+    ic.calibrate(1_000_000, measured_s=predicted * 2)    # wire is slower
+    assert ic.bw_effective[0] < 0.1
+    slow = ic.transfer_seconds(1_000_000)
+    assert slow > predicted
+    ic.calibrate(1_000_000, measured_s=slow / 4)         # now faster
+    assert ic.transfer_seconds(1_000_000) < slow
+    assert ic.calibration_samples == 2
+
+
+# ---------------------------------------------------------------------------
+# page channel: wire round-trip, events, drift billing
+# ---------------------------------------------------------------------------
+
+def test_channel_roundtrip_same_geometry():
+    pool_a, view_a, _, _ = _host()
+    pool_b, view_b, _, _ = _host()
+    toks = list(range(100, 112))
+    pages = _chain(view_a, pool_a, toks, val=7)
+    orig_k = np.asarray(pool_a.k_pool[:, pages]).copy()
+
+    events = []
+    for ev in ("link_send", "link_recv"):
+        view_a.fabric.subscribe(ev, lambda event=ev, **kw:
+                                events.append((event, kw)))
+        view_b.fabric.subscribe(ev, lambda event=ev, **kw:
+                                events.append((event, kw)))
+    ch = PageChannel(_wire(), chunk_bytes=4096)
+    parcel = ch.send(view_a, pages, now=0.0, tokens=toks, ntokens=len(toks))
+    assert parcel.chunks == -(-len(parcel.data) // 4096) and parcel.chunks > 1
+    assert parcel.arrive_s > 0.0
+    new_ids, parcel2, secs = ch.recv(view_b)
+    assert parcel2 is parcel and secs > 0.0
+    assert ch.converted_imports == 0
+    assert np.array_equal(np.asarray(pool_b.k_pool[:, new_ids]), orig_k)
+
+    # the peer's trie serves the imported chain
+    got = []
+    n = view_b.probe_prefix(toks, got, count=False)
+    assert n == len(toks) and got == new_ids
+    view_b.release(got)
+
+    kinds = [e for e, _ in events]
+    assert kinds == ["link_send", "link_recv"]
+    assert events[0][1]["bytes"] == len(parcel.data)
+    assert events[0][1]["chunks"] == parcel.chunks
+    assert events[1][1]["pages"] == len(new_ids)
+
+    # both byte ledgers balance: exporter keeps its copy, importer pays own
+    view_b.release(new_ids)
+    view_a.fabric.check_invariants()
+    view_b.fabric.check_invariants()
+
+
+def test_channel_observatory_counters_and_drift_billing():
+    pool_a, view_a, _, obs_a = _host(obs=True)
+    pool_b, view_b, _, obs_b = _host(obs=True)
+    pages = _chain(view_a, pool_a, list(range(8)), val=3)
+
+    ic = _wire(Link("a", 0.1))
+    measured = {"s": None}
+
+    def probe(kind, nbytes):
+        assert kind == "link_transfer"
+        measured["s"] = ic.transfer_seconds(nbytes) * 2.0
+        return measured["s"]
+
+    ch = PageChannel(ic, chunk_bytes=1 << 14, probe=probe)
+    parcel = ch.send(view_a, pages, now=0.0, tokens=list(range(8)),
+                     ntokens=8)
+    new_ids, _, _ = ch.recv(view_b)
+
+    m = obs_a.metrics
+    assert m.get("repro_link_bytes_total").value(
+        view_a.name, "send") == len(parcel.data)
+    assert m.get("repro_link_chunks_total").value(
+        view_a.name) == parcel.chunks
+    assert obs_b.metrics.get("repro_link_bytes_total").value(
+        view_b.name, "recv") == len(parcel.data)
+    # the measured wire time landed in the drift ledger and calibration
+    assert len(obs_a.drift.ratio["link_transfer"]) == 1
+    assert obs_a.drift.ratio["link_transfer"].last() == pytest.approx(2.0)
+    assert ic.calibration_samples == 1 and ic.bw_effective[0] < 0.1
+    view_b.release(new_ids)
+
+
+def test_channel_convert_on_import_is_token_exact():
+    pool_a, view_a, _, _ = _host(page_size=4)
+    pool_b, view_b, _, _ = _host(page_size=8)
+    toks = list(range(200, 214))                 # 14 tokens: partial tail
+    pages = []
+    for _ in range(4):                           # 4 src pages hold 14 valid
+        view_a.append_page(pages)
+    rng = np.random.default_rng(0)
+    kb = rng.standard_normal(pool_a.k_pool[:, pages].shape).astype(
+        np.asarray(pool_a.k_pool).dtype)
+    vb = rng.standard_normal(pool_a.v_pool[:, pages].shape).astype(
+        np.asarray(pool_a.v_pool).dtype)
+    pool_a.k_pool = pool_a.k_pool.at[:, pages].set(kb)
+    pool_a.v_pool = pool_a.v_pool.at[:, pages].set(vb)
+    view_a.register_prefix(toks[:12], pages[:3], 12)
+
+    ch = PageChannel(_wire(), chunk_bytes=1 << 15)
+    ch.send(view_a, pages, now=0.0, tokens=toks, ntokens=14)
+    new_ids, _, _ = ch.recv(view_b)
+    assert ch.converted_imports == 1
+    assert len(new_ids) == 2                     # ceil(14 / 8)
+
+    def tokview(arr, npages, ps):                # [L, P, ps, ...] -> tokens
+        a = np.asarray(arr)
+        return a.reshape(a.shape[0], npages * ps, *a.shape[3:])
+
+    got_k = tokview(pool_b.k_pool[:, new_ids], 2, 8)[:, :14]
+    got_v = tokview(pool_b.v_pool[:, new_ids], 2, 8)[:, :14]
+    assert np.array_equal(got_k, tokview(kb, 4, 4)[:, :14])
+    assert np.array_equal(got_v, tokview(vb, 4, 4)[:, :14])
+
+    # chain keys rebuilt over full destination pages only: 14 // 8 = 1
+    got = []
+    n = view_b.probe_prefix(toks, got, count=False)
+    assert n == 8 and got == new_ids[:1]
+    view_b.release(got)
+    view_b.release(new_ids)
+    view_a.fabric.check_invariants()
+    view_b.fabric.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# convert_range unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_convert_layout_only_mismatch_restamps():
+    pool, view, tier, _ = _host()
+    pages = _chain(view, pool, list(range(8)))
+    blob = deserialize_range(serialize_range(
+        tier.export_range(view, pages, tokens=list(range(8)), ntokens=8)))
+    other = kv_layout_metadata(pool.cfg, pool.page_size, None)
+    other = dict(other, mesh_axes={"data": 8, "model": 1})
+    out = convert_range(blob, geometry=tier._geometry(pool), layout=other)
+    assert out["layout"] == other
+    assert np.array_equal(out["k"], blob["k"])   # bytes untouched
+    assert "converted" not in out
+
+
+def test_convert_raises_on_per_token_mismatch():
+    pool, view, tier, _ = _host()
+    pages = _chain(view, pool, list(range(8)))
+    blob = tier.export_range(view, pages, tokens=list(range(8)), ntokens=8)
+    bad = dict(tier._geometry(pool))
+    bad["num_layers"] = bad["num_layers"] + 1
+    with pytest.raises(ValueError, match="recompute, not a re-layout"):
+        convert_range(blob, geometry=bad, layout=blob["layout"])
+    bad = dict(tier._geometry(pool), page_size=8)
+    bad["k_block"] = [8, 99, 99]
+    with pytest.raises(ValueError, match="k_block tail"):
+        convert_range(blob, geometry=bad, layout=blob["layout"])
+
+
+# ---------------------------------------------------------------------------
+# the router: token identity, overlap, fallback
+# ---------------------------------------------------------------------------
+
+def _engine(pool, params, *, max_batch=8):
+    sched = RequestScheduler(pool, max_batch=max_batch,
+                             prefill_token_budget=32, default_max_new=8)
+    return ServeEngine(CHAT, params, pool, scheduler=sched,
+                       wall_clock=False, sim_step_s=0.005)
+
+
+def _oracle(params, prompts, max_new):
+    pool, _, _, _ = _host(page_size=8, pages=128)
+    eng = _engine(pool, params)
+    for p in prompts:
+        eng.submit(list(p), max_new=max_new)
+    steps = 0
+    while (eng.active or eng.waiting) and steps < 2000:
+        eng.step()
+        steps += 1
+    return [list(s.tokens) for s in sorted(eng.finished,
+                                           key=lambda s: s.sid)]
+
+
+def test_router_disagg_token_identity(params):
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, CHAT.vocab_size, n).tolist()
+               for n in (12, 17, 9, 20)]
+    oracle = _oracle(params, prompts, max_new=6)
+
+    pool_p, view_p, _, _ = _host(page_size=4, pages=128)
+    pool_d, view_d, _, _ = _host(page_size=8, pages=128)
+    ch = PageChannel(_wire(), chunk_bytes=8192)
+    router = ClusterRouter(_engine(pool_p, params), _engine(pool_d, params),
+                           ch, saturation_horizon_s=10.0)
+    rids = [router.submit(list(p), max_new=6) for p in prompts]
+    router.drain()
+    assert [router.result(r) for r in rids] == oracle
+    assert router.handoffs == len(prompts) and router.fallbacks == 0
+    assert ch.converted_imports == len(prompts)   # ps 4 -> 8 every handoff
+    s = router.summary()
+    assert s["tokens"] == 6 * len(prompts)        # head token counted once
+    assert s["ttft_mean_s"] > 0 and s["ttft_weighted_goodput"] > 0
+    view_p.fabric.check_invariants()
+    view_d.fabric.check_invariants()
+
+
+def test_router_saturated_wire_falls_back_to_single_host(params):
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, CHAT.vocab_size, 10).tolist()
+               for _ in range(3)]
+    oracle = _oracle(params, prompts, max_new=5)
+
+    pool_p, _, _, _ = _host(page_size=4, pages=128)
+    pool_d, _, _, _ = _host(page_size=8, pages=128)
+    ic = _wire(Link("thin", 1e-6))               # ~nothing gets through
+    ic.send(10_000_000, now=0.0)                 # pre-existing backlog
+    router = ClusterRouter(_engine(pool_p, params), _engine(pool_d, params),
+                           PageChannel(ic), saturation_horizon_s=0.01)
+    rids = [router.submit(list(p), max_new=5) for p in prompts]
+    router.drain()
+    assert router.fallbacks == len(prompts) and router.handoffs == 0
+    assert [router.result(r) for r in rids] == oracle
+
+
+def test_router_short_requests_serve_locally(params):
+    pool_p, _, _, _ = _host(page_size=4)
+    pool_d, _, _, _ = _host(page_size=8)
+    router = ClusterRouter(_engine(pool_p, params), _engine(pool_d, params),
+                           PageChannel(_wire()), saturation_horizon_s=10.0)
+    rid = router.submit([3, 17, 29, 5], max_new=1)   # nothing to hand off
+    router.drain()
+    assert router.fallbacks == 1 and router.handoffs == 0
+    assert len(router.result(rid)) == 5

@@ -210,7 +210,8 @@ def _emit_calls(path: pathlib.Path):
 
 def test_every_emit_call_site_carries_the_contract_fields():
     files = [SRC / "placement" / "fabric.py",
-             SRC / "placement" / "persist.py"]
+             SRC / "placement" / "persist.py",
+             SRC / "cluster" / "transport.py"]
     sites = [c for f in files for c in _emit_calls(f)]
     assert len(sites) >= 10, "emit call sites went missing"
     seen_events = set()

@@ -349,6 +349,65 @@ def test_restore_telemetry(cfg):
 
 
 # ---------------------------------------------------------------------------
+# prefix-store capacity: LRU eviction among pins, surfaced skips
+# ---------------------------------------------------------------------------
+
+def test_prefix_store_lru_evicts_stalest_pin(cfg):
+    """Over the byte cap, pinned chains are kept most-recently-touched
+    first; the LRU loser is unpinned, counted, and emitted as ``evict``."""
+    pool, view, tier = _rig(cfg, capacity_pages=4)   # room for 2 chains
+    toks = [[1000 * (i + 1) + t for t in range(8)] for i in range(3)]
+    keys = []
+    for i in range(3):                               # stamps 1, 2, 3
+        _chain(view, pool, toks[i], 10 * i)
+        keys.append(tier.pin(view, toks[i]))
+    tier.touch_pin(keys[0])                          # chain 0 now newest
+    events = []
+    view.fabric.subscribe("evict", lambda **kw: events.append(kw))
+
+    manifest = tier.export_prefixes(view)
+    kept = [tuple(ch["tokens"]) for ch in manifest["chains"]]
+    assert kept == [tuple(toks[0]), tuple(toks[2])]  # stalest (1) evicted
+    assert tier.evicted_chains == 1 and tier.skipped_chains == 0
+    assert keys[1] not in tier._pins and keys[0] in tier._pins
+    assert events == [{"view": view.name, "pages": 2, "chains": 1}]
+    assert tier.stats()["evicted_chains"] == 1
+    # the eviction shows up in the tier telemetry like any other tier op
+    assert pool.telemetry.snapshot()["tiers"]["ops"]["evict"]["pages"] == 2
+    view.fabric.check_invariants()
+
+
+def test_prefix_store_capacity_skips_are_surfaced(cfg):
+    """Unpinned shared chains rejected at the cap emit ``export_skip`` and
+    are counted — in the tier and in the observatory — not dropped
+    silently (pinned chains always outrank them)."""
+    from repro.obs.observatory import Observatory
+
+    pool, view, tier = _rig(cfg, capacity_pages=4)
+    obs = Observatory(pool, tracer=False, drift=False)
+    held = []
+    for i in range(3):                     # three shared (ref-2) chains
+        toks = [2000 * (i + 1) + t for t in range(8)]
+        _chain(view, pool, toks, 20 + i)
+        got = []
+        view.probe_prefix(toks, got)       # second reader: ref -> 2
+        held.append(got)
+    events = []
+    view.fabric.subscribe("export_skip", lambda **kw: events.append(kw))
+
+    manifest = tier.export_prefixes(view)
+    assert len(manifest["chains"]) == 2
+    assert tier.skipped_chains == 1 and tier.evicted_chains == 0
+    assert events == [{"view": view.name, "pages": 2, "chains": 1}]
+    assert tier.stats()["skipped_chains"] == 1
+    assert obs.metrics.get("repro_tier_export_skips_total").value(
+        view.name) == 1
+    for got in held:
+        view.release(got)
+    view.fabric.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # PR-5 shim retirement (grep-enforced)
 # ---------------------------------------------------------------------------
 
@@ -474,3 +533,135 @@ def test_property_restart_roundtrip(lens):
         assert np.array_equal(np.asarray(pool2.k_pool[:, got]), orig)
         view2.release(got)
     view2.fabric.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# wire-format round-trip over every page geometry (cluster satellite)
+# ---------------------------------------------------------------------------
+
+GEOMETRY_KINDS = ("paged_kv", "mla_latent", "ssm_state", "encoder_kv")
+
+
+def _geom_pool(kind, page_size=4):
+    from repro.placement.geometry import encoder_kv_geometry
+    name = {"paged_kv": "qwen2-0.5b", "mla_latent": "deepseek-v3-671b",
+            "ssm_state": "xlstm-125m", "encoder_kv": "whisper-tiny"}[kind]
+    gcfg = registry.get_smoke_config(name)
+    if kind == "paged_kv":
+        gcfg = dataclasses.replace(gcfg, num_layers=1,
+                                   compute_dtype="float32")
+    geometry = encoder_kv_geometry(gcfg, page_size) \
+        if kind == "encoder_kv" else None
+    pool = BwapPagePool(gcfg, [
+        MemoryDomain("hbm_local", 12, 819.0, True),
+        MemoryDomain("host", 12, 0.016, False),
+    ], page_size=page_size, geometry=geometry,
+        dwp_config=DWPConfig(n=10 ** 6, c=1))
+    assert pool.geometry.kind == kind
+    return pool
+
+
+def _rand_fill(pool, pages, seed):
+    rng = np.random.default_rng(seed)
+    dt = np.asarray(pool.k_pool).dtype
+    k = rng.standard_normal(pool.k_pool[:, pages].shape).astype(dt)
+    v = rng.standard_normal(pool.v_pool[:, pages].shape).astype(dt)
+    pool.k_pool = pool.k_pool.at[:, pages].set(k)
+    pool.v_pool = pool.v_pool.at[:, pages].set(v)
+    return k, v
+
+
+def _wire_roundtrip(kind, npages, seed):
+    """serialize → deserialize → import on a same-geometry peer is
+    bit-exact for any geometry, any page count, any bytes."""
+    pool = _geom_pool(kind)
+    view = as_view(pool)
+    tier = PersistentTier()
+    view.fabric.attach_persist(tier)
+    pages = []
+    for _ in range(npages):
+        view.append_page(pages)
+    k, v = _rand_fill(pool, pages, seed)
+    toks = None
+    if pool.geometry.shareable and npages * pool.page_size >= 1:
+        toks = [seed % 97 + t for t in range(npages * pool.page_size)]
+        view.register_prefix(toks, pages, len(toks))
+    blob = deserialize_range(serialize_range(tier.export_range(
+        view, pages, tokens=toks,
+        ntokens=npages * pool.page_size)))
+    assert blob["geometry"]["kind"] == kind
+
+    pool2 = _geom_pool(kind)
+    view2 = as_view(pool2)
+    tier2 = PersistentTier()
+    view2.fabric.attach_persist(tier2)
+    new_ids, _ = tier2.import_range(view2, blob)
+    assert np.array_equal(np.asarray(pool2.k_pool[:, new_ids]), k)
+    assert np.array_equal(np.asarray(pool2.v_pool[:, new_ids]), v)
+    view.fabric.check_invariants()
+    view2.fabric.check_invariants()
+    view2.release(new_ids)
+
+
+def _convert_roundtrip(ps_src, ps_dst, ntokens, seed):
+    """A paged_kv range re-chunks across page sizes through the channel,
+    bit-exact per valid token, with balanced ledgers on both fabrics."""
+    from repro.cluster import Interconnect, Link, PageChannel
+
+    pool_a = _geom_pool("paged_kv", page_size=ps_src)
+    view_a = as_view(pool_a)
+    view_a.fabric.attach_persist(PersistentTier())
+    pool_b = _geom_pool("paged_kv", page_size=ps_dst)
+    view_b = as_view(pool_b)
+    view_b.fabric.attach_persist(PersistentTier())
+    npages = -(-ntokens // ps_src)
+    pages = []
+    for _ in range(npages):
+        view_a.append_page(pages)
+    k, v = _rand_fill(pool_a, pages, seed)
+    toks = [seed % 89 + t for t in range(ntokens)]
+
+    ch = PageChannel(Interconnect([Link("wire", 0.1)]), chunk_bytes=1 << 14)
+    ch.send(view_a, pages, now=0.0, tokens=toks, ntokens=ntokens)
+    new_ids, _, _ = ch.recv(view_b)
+    assert len(new_ids) == -(-ntokens // ps_dst)
+    assert ch.converted_imports == (1 if ps_src != ps_dst else 0)
+
+    def tokens_of(arr, npg, ps):
+        a = np.asarray(arr)
+        return a.reshape(a.shape[0], npg * ps, *a.shape[3:])[:, :ntokens]
+
+    assert np.array_equal(tokens_of(pool_b.k_pool[:, new_ids],
+                                    len(new_ids), ps_dst),
+                          tokens_of(k, npages, ps_src))
+    assert np.array_equal(tokens_of(pool_b.v_pool[:, new_ids],
+                                    len(new_ids), ps_dst),
+                          tokens_of(v, npages, ps_src))
+    view_a.fabric.check_invariants()
+    view_b.fabric.check_invariants()
+    view_b.release(new_ids)
+
+
+@pytest.mark.parametrize("kind", GEOMETRY_KINDS)
+def test_wire_roundtrip_each_geometry(kind):
+    _wire_roundtrip(kind, npages=2, seed=7)
+
+
+@pytest.mark.parametrize("ps_src,ps_dst,ntokens",
+                         [(4, 8, 14), (8, 4, 9), (2, 8, 7), (4, 4, 12)])
+def test_convert_on_import_each_direction(ps_src, ps_dst, ntokens):
+    _convert_roundtrip(ps_src, ps_dst, ntokens, seed=11)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(GEOMETRY_KINDS), st.integers(1, 3),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_wire_roundtrip_all_geometries(kind, npages, seed):
+    _wire_roundtrip(kind, npages, seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([2, 4, 8]), st.sampled_from([2, 4, 8]),
+       st.integers(1, 24), st.integers(0, 2 ** 31 - 1))
+def test_property_convert_on_import(ps_src, ps_dst, ntokens, seed):
+    _convert_roundtrip(ps_src, ps_dst, ntokens, seed)

@@ -358,6 +358,54 @@ def test_arbiter_observe_rehomes_view_sequences(small_cfg):
     arb.fabric.check_invariants()
 
 
+def test_arbiter_pins_hottest_preambles(small_cfg):
+    """The arbiter's pin selection ranks cross-tenant chains by
+    refcount × heat and pins the winners into the persistence tier;
+    re-selection refreshes the LRU stamp instead of duplicating pins."""
+    from repro.obs.observatory import Observatory
+    from repro.placement.persist import PersistentTier
+
+    arb = DomainArbiter(SPECS, page_size=4)
+    a = arb.register("A", small_cfg, priority=Priority.HIGH, share=0.4)
+    b = arb.register("B", small_cfg, priority=Priority.BEST_EFFORT,
+                     share=0.4)
+    tier = PersistentTier(capacity_pages=64)
+    arb.fabric.attach_persist(tier)
+    obs = Observatory(arb.fabric, tracer=False, drift=False)
+
+    def chain(toks, val):
+        pages = []
+        for i in range(len(toks) // 4):
+            a.view.append_page(pages)
+        a.view.register_prefix(list(toks), pages, len(toks))
+        return pages
+
+    cold = chain(list(range(100, 108)), 1)     # cross-tenant shared, cool
+    hot = chain(list(range(200, 208)), 2)      # cross-tenant shared, hot
+    private = chain(list(range(300, 308)), 3)  # only tenant A: ref 1
+    shared_b = []
+    for toks in (list(range(100, 108)), list(range(200, 208))):
+        got = []
+        assert b.view.probe_prefix(toks, got) == 8    # B shares: ref -> 2
+        shared_b.append(got)
+    for _ in range(5):
+        obs.heat.touch(hot)
+
+    keys = arb.pin_hot_preambles(top_k=1, min_ref=2)
+    assert len(keys) == 1 and keys[0] in tier._pins
+    assert tier.pinned_pages() == set(hot)     # heat broke the ref tie
+    assert not (set(private) & tier.pinned_pages())
+    stamp0 = tier._pins[keys[0]]["stamp"]
+    assert arb.pin_hot_preambles(top_k=1, min_ref=2) == keys
+    assert tier._pins[keys[0]]["stamp"] > stamp0   # touched, not re-pinned
+
+    # with room for two, the cool shared chain joins; the private never does
+    keys2 = arb.pin_hot_preambles(top_k=3, min_ref=2)
+    assert tier.pinned_pages() == set(hot) | set(cold)
+    assert len(keys2) == 2
+    arb.fabric.check_invariants()
+
+
 def test_arbiter_unregister_redistributes_quota(small_cfg):
     """Tenant leave is pure ledger arithmetic on the shared fabric: the
     survivor's quota grows in place — no pool rebuild, no id remapping,
